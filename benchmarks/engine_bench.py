@@ -1,0 +1,55 @@
+"""Continuous-batching engine microbenchmark (data-plane sanity numbers).
+
+Reduced model on CPU: decode step latency vs batch occupancy, prefill
+bucket costs, tokens/s, and scheduler behaviour under a burst.  These are
+CPU wall-clock numbers for the *real* engine code path — production
+performance projections come from the dry-run roofline, not from here.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving import InferenceEngine, Request, SamplingParams
+from repro.serving.scheduler import SchedulerConfig
+
+
+def run(arch: str = "qwen2-0.5b-smoke", n_requests: int = 12,
+        capacity: int = 8, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    eng = InferenceEngine(cfg, capacity=capacity, max_len=96, buckets=(16, 32),
+                          sched=SchedulerConfig(max_prefill_per_step=2))
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        eng.submit(Request(
+            rid=i,
+            prompt=[int(x) for x in rng.integers(0, cfg.vocab_size,
+                                                 int(rng.integers(4, 28)))],
+            sampling=SamplingParams(max_new_tokens=8, temperature=0.7, top_k=32)))
+    done = eng.run(max_steps=500)
+    wall = time.perf_counter() - t0
+
+    toks = sum(len(r.output) for r in done)
+    decode_times = [s.decode_s for s in eng.history if s.decode_s > 0]
+    occ = [s.occupancy for s in eng.history]
+    stats = {
+        "finished": len(done),
+        "tokens": toks,
+        "tokens_per_s": toks / wall,
+        "decode_p50_ms": 1e3 * float(np.percentile(decode_times, 50)) if decode_times else 0,
+        "max_occupancy": max(occ) if occ else 0,
+        "mean_ttft_s": float(np.mean([r.ttft for r in done if r.ttft is not None])),
+        "steps": len(eng.history),
+    }
+    if verbose:
+        for k, v in stats.items():
+            print(f"{k}: {v}")
+    assert len(done) == n_requests
+    return stats
+
+
+if __name__ == "__main__":
+    run()

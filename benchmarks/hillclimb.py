@@ -1,0 +1,72 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# Perf-iteration driver (§Perf): lower one cell with PerfConfig overrides and
+# report the roofline terms + top contributors to the dominant term.
+#
+#   PYTHONPATH=src python -m benchmarks.hillclimb --arch gemma3-27b \
+#       --shape train_4k --perf partitioning=zero3 attn_impl=triangle
+#
+# Each run appends a JSON record to benchmarks/out/hillclimb.jsonl so the
+# hypothesis -> change -> before/after log in EXPERIMENTS.md is replayable.
+
+import argparse
+import json
+import time
+
+from repro.configs import SHAPES, get_config
+from repro.configs.perf import with_overrides
+from repro.launch import hlo as H
+from repro.launch.build import build_cell, default_perf
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.launch.dryrun import parse_perf_overrides
+
+
+def run(arch: str, shape_name: str, overrides: dict, *, debug_top: bool = True,
+        out: str | None = "benchmarks/out/hillclimb.jsonl") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    perf = with_overrides(default_perf(cfg, shape), **overrides)
+    mesh = make_production_mesh()
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh, perf)
+    with mesh:
+        compiled = cell.jitted.lower(*cell.abstract_args).compile()
+    txt = compiled.as_text()
+    mod = H.HloModule(txt)
+    flops = mod.flops()
+    byts = mod.bytes_accessed()
+    coll = mod.collectives()
+    mem = H.memory_per_device(compiled)
+    terms = {
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": byts / HBM_BW,
+        "collective_s": coll.get("total", 0.0) / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    rec = {
+        "arch": arch, "shape": shape_name, "overrides": overrides,
+        **{k: round(v, 4) for k, v in terms.items()},
+        "dominant": dominant,
+        "peak_gib": round(mem["peak_bytes"] / 2**30, 2),
+        "compile_s": round(time.time() - t0, 1),
+    }
+    print(json.dumps(rec, indent=None))
+    if debug_top:
+        what = "collectives" if dominant == "collective_s" else "bytes"
+        print(f"\ntop {what} contributors:")
+        for (comp, op, name), b in H.top_ops(mod, what):
+            print(f"  {b:.3e}  {op:24s} {name:48s} {comp}")
+    if out:
+        with open(out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--perf", nargs="*", default=[])
+    ap.add_argument("--no-debug", action="store_true")
+    a = ap.parse_args()
+    run(a.arch, a.shape, parse_perf_overrides(a.perf), debug_top=not a.no_debug)

@@ -1,0 +1,148 @@
+"""Roofline analysis from the dry-run's compiled artifacts (§Roofline).
+
+Reads benchmarks/out/dryrun.jsonl (written by repro.launch.dryrun) and
+derives, per (arch x shape) cell on the single-pod 16x16 mesh:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s     [s]
+    memory term     = HLO_bytes_per_device / HBM_bw          [s]
+    collective term = wire_bytes_per_device / link_bw        [s]
+
+plus MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (inference) and the
+useful-compute ratio MODEL_FLOPS / (HLO_FLOPs * chips).
+
+HLO numbers come from the static walker in repro.launch.hlo (while bodies
+multiplied by trip count; see that module for the byte-accounting rules).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models import params as P
+from repro.models.lm import make_model
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "out", "dryrun.jsonl")
+
+
+def active_params(cfg) -> tuple[int, int]:
+    """(N_total, N_active_per_token)."""
+    model = make_model(cfg)
+    total = P.count_params(model.param_specs())
+    active = total
+    if cfg.num_experts:
+        n_moe_layers = sum(cfg.layer_is_moe(i) for i in range(cfg.num_layers))
+        per_layer_expert = 3 * cfg.num_experts * cfg.d_model * cfg.moe_d_ff
+        active -= n_moe_layers * per_layer_expert
+        active += n_moe_layers * 3 * cfg.experts_per_token * cfg.d_model * cfg.moe_d_ff
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    _, act = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * act * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * act * shape.global_batch * shape.seq_len
+    return 2.0 * act * shape.global_batch      # decode: one token per row
+
+
+def min_decode_bytes(cfg, shape) -> float:
+    """Lower bound on global HBM traffic for one decode step: read active
+    params once + read the live KV/SSM state for every row.  The
+    bandwidth-efficiency metric for decode cells is min_bytes / HLO_bytes."""
+    from repro.launch.specs import decode_specs
+    import numpy as np
+    _, act = active_params(cfg)
+    param_bytes = 2.0 * act                    # bf16
+    d = decode_specs(cfg, shape)
+    cache_bytes = sum(float(np.prod(s.shape)) * s.dtype.itemsize
+                      for s in __import__("jax").tree.leaves(d["caches"]))
+    return param_bytes + cache_bytes
+
+
+def load_records(path: str = DRYRUN, mesh: str = "16x16") -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("mesh") == mesh:
+            recs[(r["arch"], r["shape"])] = r   # latest wins
+    return list(recs.values())
+
+
+def analyze(rec: dict, chips: int = 256) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    compute_s = rec["flops_per_device"] / PEAK_FLOPS_BF16
+    memory_s = rec["bytes_per_device"] / HBM_BW
+    coll_s = rec["collectives"].get("total", 0.0) / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_total = rec["flops_per_device"] * chips
+    ratio = mf / hlo_total if hlo_total else 0.0
+    bound_s = max(terms.values())
+    # decode cells are intrinsically bandwidth-bound: score them by traffic
+    # efficiency (ideal bytes / compiled bytes) instead of an MFU-like ratio
+    mem_eff = None
+    if shape.kind == "decode":
+        mem_eff = (min_decode_bytes(cfg, shape) / chips) / \
+            max(rec["bytes_per_device"], 1.0)
+    suggestions = {
+        "compute": "cut redundant compute: triangle attention chunks, lower "
+                   "remat recompute, or drop TP replication of attention",
+        "memory": "fuse attention (Pallas flash kernel keeps scores in VMEM) "
+                  "and shrink remat boundaries / KV dtype",
+        "collective": "reshard: fewer TP all-reduces (dp/zero3 rules), "
+                      "overlap collectives with compute via async decomposition",
+    }
+    frac = (mf / PEAK_FLOPS_BF16 / chips) / bound_s if bound_s else 0.0
+    if mem_eff is not None:
+        frac = mem_eff                 # decode: bandwidth-efficiency score
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "useful_ratio": ratio,
+        "roofline_fraction": frac,
+        "kind": shape.kind,
+        "peak_gib": rec["memory"]["peak_bytes"] / 2**30,
+        "suggestion": suggestions[dominant],
+    }
+
+
+def table(mesh: str = "16x16", verbose: bool = True) -> list[dict]:
+    rows = [a for r in load_records(mesh=mesh) if (a := analyze(r))]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    if verbose:
+        print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+              "useful_ratio,roofline_fraction,peak_GiB")
+        for r in rows:
+            print(f"{r['arch']},{r['shape']},{r['compute_s']:.4g},"
+                  f"{r['memory_s']:.4g},{r['collective_s']:.4g},{r['dominant']},"
+                  f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f},"
+                  f"{r['peak_gib']:.2f}")
+    return rows
+
+
+def markdown(rows: list[dict]) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL/HLO flops | roofline frac | peak GiB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | {r['dominant']} | "
+            f"{r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} | "
+            f"{r['peak_gib']:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    table()

@@ -1,0 +1,73 @@
+"""Benchmark harness — one entry per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Emits a summary line per benchmark:  name,value,unit,paper_reference
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> int:
+    from benchmarks import engine_bench, fig3_bottleneck, fig4_autoscaling, roofline
+
+    print("=" * 72)
+    print("FIG 3 — per-layer bottleneck identification (calibrated sim)")
+    print("=" * 72)
+    t0 = time.time()
+    f3 = fig3_bottleneck.run(verbose=True)
+    print(f"[fig3 took {time.time()-t0:.1f}s]")
+
+    print("\n" + "=" * 72)
+    print("FIG 4 — autoscaling latency/throughput sweep (calibrated sim)")
+    print("=" * 72)
+    t0 = time.time()
+    f4 = fig4_autoscaling.run(verbose=True)
+    print(f"[fig4 took {time.time()-t0:.1f}s]")
+
+    print("\n" + "=" * 72)
+    print("ENGINE — continuous-batching microbench (real JAX engine, CPU)")
+    print("=" * 72)
+    eng = engine_bench.run(verbose=True)
+
+    print("\n" + "=" * 72)
+    print("PREDICTION — proactive-vs-reactive autoscaling ablation")
+    print("=" * 72)
+    from benchmarks import burst_proactive
+    pred = burst_proactive.run(verbose=True)
+
+    print("\n" + "=" * 72)
+    print("ROOFLINE — per-cell terms from the dry-run (16x16 mesh)")
+    print("=" * 72)
+    rows = roofline.table(verbose=True)
+
+    # ------------------------------------------------------------- summary
+    print("\n" + "=" * 72)
+    print("SUMMARY  name,value,unit,paper_reference")
+    print("=" * 72)
+    wo = next(r for r in f4 if r["batch"] == 62 and not r["autoscale"])
+    w = next(r for r in f4 if r["batch"] == 62 and r["autoscale"])
+    print(f"fig3_hotspot_ratio,{f3['ratio']:.0f},x,paper >230x")
+    print(f"fig4_latency_wo,{wo['e2e_s']:.2f},s,paper 15.23")
+    print(f"fig4_latency_cn,{w['e2e_s']:.2f},s,paper 12.28")
+    print(f"fig4_qps_wo,{wo['qps']:.2f},qps,paper 4.07")
+    print(f"fig4_qps_cn,{w['qps']:.2f},qps,paper 5.05")
+    print(f"engine_tokens_per_s,{eng['tokens_per_s']:.1f},tok/s,(CPU reduced)")
+    print(f"proactive_lead,{pred['ramp']['lead_s']:.0f},s,(beyond paper: §3 prediction module)")
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        best = max(rows, key=lambda r: r["roofline_fraction"])
+        print(f"roofline_cells,{len(rows)},cells,40 minus documented skips")
+        print(f"roofline_best,{best['roofline_fraction']:.3f},frac,"
+              f"{best['arch']}x{best['shape']}")
+        print(f"roofline_worst,{worst['roofline_fraction']:.3f},frac,"
+              f"{worst['arch']}x{worst['shape']}")
+    else:
+        print("roofline_cells,0,cells,run repro.launch.dryrun --all first")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

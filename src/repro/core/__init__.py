@@ -1,0 +1,11 @@
+"""The paper's contribution: cloud-native control plane for LLM serving.
+
+Modules map 1:1 to the paper's six platform components (DESIGN.md §2):
+loadbalancer, autoscaler, migration, predictor, profiler, microservice —
+plus the cluster simulator and the real-engine orchestrator that host them.
+"""
+from repro.core.autoscaler import Autoscaler, HPAConfig  # noqa: F401
+from repro.core.loadbalancer import LoadBalancer  # noqa: F401
+from repro.core.migration import MigrationConfig, MigrationManager  # noqa: F401
+from repro.core.predictor import EWMA, HoltWinters, WindowedAR, make_predictor  # noqa: F401
+from repro.core.profiler import Profiler  # noqa: F401

@@ -1,0 +1,370 @@
+"""Discrete-event cluster: layer-microservices, replicas, autoscaling.
+
+The paper's testbed decomposes LLaMA-2-13B into 40 per-layer gRPC
+microservices on a 3xA100 Kubernetes cluster.  This module reproduces that
+system as an event-driven simulation whose *control plane* (profiler, HPA
+autoscaler, load balancer, migration) is the same code that drives the real
+JAX engine — only the data plane differs (calibrated cost model vs compiled
+programs).
+
+Key mechanism (paper §4.2): horizontal scaling of a bottleneck layer's
+microservice lets the load balancer SPLIT a batch across replicas, cutting
+the batch-dependent term of the layer's service time; queueing delay also
+drops under concurrency.  Cold starts, heavy-tailed interference (the
+source of the 230x Layer-27 hotspot) and stragglers are modelled explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+import random
+from collections import defaultdict
+from typing import Callable
+
+from repro.core.autoscaler import Autoscaler, HPAConfig
+from repro.core.loadbalancer import LoadBalancer
+from repro.core.profiler import Profiler
+
+
+# ----------------------------------------------------------------- cost model
+@dataclasses.dataclass
+class LayerCost:
+    """Per-layer service time:  t(b, R) = alpha + beta * ceil(b/R) + gamma*(R-1).
+
+    ``alpha`` absorbs fixed per-call cost (kernel launch, gRPC hop, and for
+    throttled hotspots the contention/thermal penalty the paper observed);
+    ``beta`` is the batch-proportional compute/memory term; ``gamma`` is the
+    scatter/gather overhead of splitting one batch across R replicas.
+    """
+    alpha: float
+    beta: float
+    jitter_sigma: float = 0.0       # lognormal sigma applied under load
+    split_overhead: float = 0.478   # gamma
+
+    def service_s(self, batch: int, split: int, rng: random.Random,
+                  loaded: bool) -> float:
+        t = (self.alpha + self.beta * batch
+             + self.split_overhead * (max(split, 1) - 1))
+        if self.jitter_sigma > 0 and loaded:
+            t *= rng.lognormvariate(0.0, self.jitter_sigma)
+        return t
+
+
+def llama2_13b_a100_costs(num_layers: int = 40, *, hotspot: int = 27,
+                          seed: int = 0) -> list[LayerCost]:
+    """Calibrated to the paper's testbed (LLaMA-2-13B, 3xA100-80GB, NVLink,
+    input 50-2048 tokens).  Derivation of the three free constants from the
+    paper's own numbers (batch 62, closed loop):
+
+      E2E(w/o)  = others + alpha27 + 0.095*62            = 15.23 s
+      E2E(with) = others + alpha27 + 0.095*ceil(62/3) + 2*gamma = 12.28 s
+      => gamma = 0.478 s, and with others = 4.22 s (39 layers at their
+         measured ~63 ms + two warm layers), alpha27 = 5.12 s.
+
+    QPS then follows as batch/E2E: 4.07 -> 5.05 (paper Fig. 4b).  The Fig. 3
+    '>230x Layer 27 vs Layer 30' max-latency ratio comes from the hotspot's
+    heavy-tailed interference jitter under concurrency.
+    """
+    rng = random.Random(seed)
+    costs = []
+    for i in range(num_layers):
+        base = 0.035 * rng.uniform(0.9, 1.1)
+        beta = 0.00045 * rng.uniform(0.9, 1.1)
+        costs.append(LayerCost(alpha=base, beta=beta, jitter_sigma=0.15))
+    costs[hotspot] = LayerCost(alpha=5.12, beta=0.095, jitter_sigma=0.35)
+    # two secondary warm spots (Fig. 3 shows several elevated layers)
+    costs[15] = LayerCost(alpha=0.35, beta=0.004, jitter_sigma=0.3)
+    costs[33] = LayerCost(alpha=0.8, beta=0.008, jitter_sigma=0.3)
+    # fastest layer (the paper's Layer 30 reference point)
+    costs[30] = LayerCost(alpha=0.028, beta=0.0003, jitter_sigma=0.05)
+    return costs
+
+
+# ----------------------------------------------------------------- entities
+@dataclasses.dataclass
+class Replica:
+    svc: str
+    idx: int
+    ready_at: float                 # cold start completes
+    busy_until: float = 0.0
+    outstanding: int = 0
+    failed: bool = False
+    speed: float = 1.0              # <1 == straggler
+
+    def load(self, now: float) -> float:
+        return self.outstanding + max(0.0, self.busy_until - now)
+
+
+class Service:
+    """One microservice (a contiguous layer range) with N replicas."""
+
+    def __init__(self, name: str, layers: tuple[int, int],
+                 cost: Callable[[int, int, random.Random, bool], float],
+                 lb: LoadBalancer, autoscaler: Autoscaler | None,
+                 cold_start_s: float, rng: random.Random):
+        self.name = name
+        self.layers = layers
+        self.cost = cost
+        self.lb = lb
+        self.autoscaler = autoscaler
+        self.cold_start_s = cold_start_s
+        self.rng = rng
+        self.replicas: list[Replica] = [Replica(name, 0, ready_at=0.0)]
+        self.scale_events: list[tuple[float, int]] = []
+
+    def ready(self, now: float) -> list[Replica]:
+        return [r for r in self.replicas if not r.failed and r.ready_at <= now]
+
+    def scale_to(self, now: float, n: int) -> None:
+        n = max(1, n)
+        cur = len([r for r in self.replicas if not r.failed])
+        if n > cur:
+            for i in range(n - cur):
+                self.replicas.append(
+                    Replica(self.name, len(self.replicas),
+                            ready_at=now + self.cold_start_s))
+            self.scale_events.append((now, n))
+        elif n < cur:
+            # retire the youngest idle replicas
+            victims = [r for r in sorted(self.replicas, key=lambda r: -r.ready_at)
+                       if not r.failed][: cur - n]
+            for v in victims:
+                self.replicas.remove(v)
+            self.scale_events.append((now, n))
+
+
+@dataclasses.dataclass
+class SimJob:
+    jid: int
+    batch: int                       # queries in this batch job
+    tokens: int
+    t_submit: float
+    stage_latency: dict[str, float] = dataclasses.field(default_factory=dict)
+    t_done: float | None = None
+
+    @property
+    def e2e(self) -> float | None:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+
+# ----------------------------------------------------------------- cluster
+@dataclasses.dataclass
+class ClusterConfig:
+    num_layers: int = 40
+    cold_start_s: float = 12.0       # shard load: ~0.65GB layer / ~55 MB/s eff
+    control_period_s: float = 5.0
+    lb_policy: str = "least"
+    batch_split: bool = True         # split batches across ready replicas
+    seed: int = 0
+
+
+class SimCluster:
+    """Event-driven execution of batch jobs through layer microservices."""
+
+    def __init__(self, cfg: ClusterConfig, costs: list[LayerCost],
+                 hpa: HPAConfig | None = None,
+                 hpa_targets: list[int] | None = None,
+                 profiler: Profiler | None = None):
+        self.cfg = cfg
+        self.rng = random.Random(cfg.seed)
+        self.profiler = profiler or Profiler(window_s=15.0)
+        self.services: list[Service] = []
+        for i, c in enumerate(costs):
+            scaler = None
+            if hpa is not None and (hpa_targets is None or i in hpa_targets):
+                scaler = Autoscaler(hpa)
+            self.services.append(Service(
+                f"layer/{i}", (i, i + 1), c.service_s,
+                LoadBalancer(cfg.lb_policy, seed=cfg.seed + i), scaler,
+                cfg.cold_start_s, self.rng))
+        self._events: list[tuple[float, int, str, tuple]] = []
+        self._seq = 0
+        self.now = 0.0
+        self.done: list[SimJob] = []
+        self._inflight: dict[int, SimJob] = {}
+        self.on_done: Callable[[SimJob], None] | None = None
+        self._push(self.cfg.control_period_s, "control", ())
+
+    # ------------------------------------------------------------ plumbing
+    def _push(self, t: float, kind: str, payload: tuple) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (t, self._seq, kind, payload))
+
+    def submit(self, job: SimJob) -> None:
+        self._inflight[job.jid] = job
+        self._push(job.t_submit, "stage", (job.jid, 0))
+
+    def inject_failure(self, t: float, svc_idx: int, replica_idx: int) -> None:
+        self._push(t, "fail", (svc_idx, replica_idx))
+
+    def inject_straggler(self, t: float, svc_idx: int, replica_idx: int,
+                         speed: float) -> None:
+        self._push(t, "straggle", (svc_idx, replica_idx, speed))
+
+    # ------------------------------------------------------------ mechanics
+    def _run_stage(self, job: SimJob, si: int) -> None:
+        svc = self.services[si]
+        ready = svc.ready(self.now)
+        if not ready:
+            # all replicas cold/failed: retry when the first becomes ready
+            t_next = min(r.ready_at for r in svc.replicas if not r.failed)
+            self._push(max(t_next, self.now + 1e-6), "stage", (job.jid, si))
+            return
+        t_stage_start = self.now
+        if self.cfg.batch_split and len(ready) > 1:
+            shards = len(ready)
+            per = math.ceil(job.batch / shards)
+            finish = []
+            for r in ready:
+                loaded = r.outstanding > 0
+                svc_t = svc.cost(per, shards, self.rng, loaded) / r.speed
+                start = max(self.now, r.busy_until)
+                r.busy_until = start + svc_t
+                r.outstanding += 1
+                finish.append(r.busy_until)
+            t_done = max(finish)
+            self._push(t_done, "stage_done", (job.jid, si, t_stage_start, tuple(r.idx for r in ready)))
+        else:
+            r = svc.lb.pick(ready, load=lambda x: x.load(self.now),
+                            weight=lambda x: x.speed)
+            loaded = r.outstanding > 0
+            svc_t = svc.cost(job.batch, 1, self.rng, loaded) / r.speed
+            start = max(self.now, r.busy_until)
+            r.busy_until = start + svc_t
+            r.outstanding += 1
+            self._push(r.busy_until, "stage_done", (job.jid, si, t_stage_start, (r.idx,)))
+
+    def _stage_done(self, jid: int, si: int, t_start: float, ridxs: tuple) -> None:
+        job = self._inflight[jid]
+        svc = self.services[si]
+        for r in svc.replicas:
+            if r.idx in ridxs and r.outstanding > 0:
+                r.outstanding -= 1
+        lat = self.now - t_start
+        job.stage_latency[svc.name] = lat
+        self.profiler.observe_latency(svc.name, self.now, lat)
+        if si + 1 < len(self.services):
+            self._push(self.now, "stage", (jid, si + 1))
+        else:
+            job.t_done = self.now
+            self.done.append(self._inflight.pop(jid))
+            if self.on_done is not None:
+                self.on_done(job)
+
+    def _control(self) -> None:
+        for svc in self.services:
+            # utilization telemetry
+            for r in svc.ready(self.now):
+                busy = min(1.0, max(0.0, (r.busy_until - self.now)
+                                    / self.cfg.control_period_s))
+                self.profiler.observe_util(svc.name, self.now, busy)
+            if svc.autoscaler is None:
+                continue
+            cfg = svc.autoscaler.cfg
+            if cfg.metric == "latency":
+                metric = self.profiler.p(svc.name, 95, self.now)
+            elif cfg.metric == "util":
+                metric = self.profiler.mean_util(svc.name, self.now)
+            else:
+                metric = sum(r.outstanding for r in svc.replicas)
+            if metric <= 0:
+                continue
+            cur = len([r for r in svc.replicas if not r.failed])
+            new = svc.autoscaler.evaluate(self.now, cur, metric)
+            if new != cur:
+                svc.scale_to(self.now, new)
+        self._push(self.now + self.cfg.control_period_s, "control", ())
+
+    # ------------------------------------------------------------ run loop
+    def run(self, until: float) -> None:
+        while self._events:
+            t, _, kind, payload = self._events[0]
+            if t > until and kind == "control" and not self._inflight:
+                break
+            if t > until and kind == "control":
+                # keep controlling while jobs drain
+                pass
+            heapq.heappop(self._events)
+            self.now = max(self.now, t)
+            if kind == "stage":
+                self._run_stage(self._inflight[payload[0]], payload[1])
+            elif kind == "stage_done":
+                self._stage_done(*payload)
+            elif kind == "control":
+                if self.now <= until or self._inflight:
+                    self._control()
+            elif kind == "fail":
+                si, ri = payload
+                for r in self.services[si].replicas:
+                    if r.idx == ri:
+                        r.failed = True
+            elif kind == "straggle":
+                si, ri, speed = payload
+                for r in self.services[si].replicas:
+                    if r.idx == ri:
+                        r.speed = speed
+            if not self._inflight and not any(
+                    k in ("stage", "stage_done") for _, _, k, _ in self._events):
+                if self.now >= until:
+                    break
+
+    # ------------------------------------------------------------ metrics
+    def qps(self, t0: float = 0.0, t1: float | None = None) -> float:
+        t1 = t1 if t1 is not None else self.now
+        q = sum(j.batch for j in self.done if t0 <= (j.t_done or 0) <= t1)
+        return q / max(t1 - t0, 1e-9)
+
+    def mean_e2e(self, t0: float = 0.0) -> float:
+        vals = [j.e2e for j in self.done
+                if j.e2e is not None and (j.t_done or 0) >= t0]
+        return sum(vals) / len(vals) if vals else 0.0
+
+    def stage_latency_stats(self, name: str, t0: float = 0.0) -> dict:
+        vals = [j.stage_latency.get(name) for j in self.done
+                if (j.t_done or 0) >= t0]
+        vals = [v for v in vals if v is not None]
+        if not vals:
+            return {"mean": 0.0, "max": 0.0, "p99": 0.0}
+        vs = sorted(vals)
+        return {"mean": sum(vals) / len(vals), "max": vs[-1],
+                "p99": vs[min(len(vs) - 1, int(0.99 * len(vs)))]}
+
+
+# ----------------------------------------------------------------- workload
+def closed_loop(cluster: SimCluster, *, users: int, batch: int,
+                duration_s: float, tokens=lambda rng: rng.randint(50, 2048),
+                seed: int = 0) -> None:
+    """Locust-style closed loop: each user resubmits on completion."""
+    rng = random.Random(seed)
+    jid = [0]
+
+    def spawn(t: float) -> None:
+        cluster.submit(SimJob(jid[0], batch, tokens(rng), t_submit=t))
+        jid[0] += 1
+
+    def on_done(job: SimJob) -> None:
+        if job.t_done is not None and job.t_done < duration_s:
+            spawn(job.t_done)
+
+    cluster.on_done = on_done
+    for _ in range(users):
+        spawn(0.0)
+    cluster.run(until=duration_s)
+    cluster.on_done = None
+
+
+def poisson_open_loop(cluster: SimCluster, *, rate_jobs_s: float, batch: int,
+                      duration_s: float,
+                      tokens=lambda rng: rng.randint(50, 2048),
+                      seed: int = 0) -> None:
+    """Open-loop Poisson arrivals (burst studies use rate step functions)."""
+    rng = random.Random(seed)
+    t, jid = 0.0, 0
+    while t < duration_s:
+        t += rng.expovariate(rate_jobs_s)
+        if t >= duration_s:
+            break
+        cluster.submit(SimJob(jid, batch, tokens(rng), t_submit=t))
+        jid += 1
+    cluster.run(until=duration_s)

@@ -1,0 +1,38 @@
+"""Load balancing (paper §3 'Load balancing').
+
+Istio-style request routing over the replicas of one (micro)service.
+Policies: round-robin, least-outstanding-requests, power-of-two-choices,
+weighted join-shortest-queue (weights = replica capacity, e.g. heterogeneous
+hardware).
+"""
+from __future__ import annotations
+
+import random
+from typing import Callable, Sequence
+
+
+class LoadBalancer:
+    def __init__(self, policy: str = "p2c", seed: int = 0):
+        assert policy in ("rr", "least", "p2c", "wjsq")
+        self.policy = policy
+        self._rr = 0
+        self._rng = random.Random(seed)
+
+    def pick(self, replicas: Sequence, load: Callable[[object], float],
+             weight: Callable[[object], float] = lambda r: 1.0) -> object:
+        """Choose a replica.  ``load(r)`` = outstanding work (queue depth or
+        busy seconds); ``weight(r)`` = capacity multiplier."""
+        live = [r for r in replicas]
+        assert live, "no replicas"
+        if len(live) == 1:
+            return live[0]
+        if self.policy == "rr":
+            self._rr = (self._rr + 1) % len(live)
+            return live[self._rr]
+        if self.policy == "least":
+            return min(live, key=load)
+        if self.policy == "p2c":
+            a, b = self._rng.sample(live, 2)
+            return a if load(a) <= load(b) else b
+        # weighted JSQ: smallest load normalised by capacity
+        return min(live, key=lambda r: load(r) / max(weight(r), 1e-9))

@@ -1,0 +1,220 @@
+"""Fine-grained modularization (paper §3): the model as stage microservices.
+
+A :class:`StagedLM` splits a decoder-only LM into ``num_stages`` contiguous
+group-ranges.  Each stage is an independently jitted program over its own
+parameter/cache slice — the schedulable, scalable, observable unit the paper
+argues for.  On TPU a stage replica is one pjit program on its own device
+slice; the per-layer gRPC hop of the paper's K8s prototype becomes a
+host-side handoff (see DESIGN.md §2 on why we do not emulate per-layer RPC
+inside the chip domain).
+
+:class:`StagePipeline` executes decode steps stage-by-stage with per-stage
+replica sets, wall-clock profiling per stage, and batch-splitting across
+replicas — the real-engine backend for the control plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.profiler import Profiler
+from repro.models import layers as L
+from repro.models.lm import LM
+
+
+def _tree_slice(tree, g0: int, g1: int):
+    return jax.tree.map(lambda a: a[g0:g1], tree)
+
+
+def _slice_rows(stage_cache: dict, s0: int, s1: int) -> dict:
+    """Batch-row slice of a stage cache ('blocks' carry batch at axis 1
+    behind the stacked group axis; 'tail' entries at axis 0)."""
+    out = {"blocks": jax.tree.map(lambda a: a[:, s0:s1], stage_cache["blocks"])}
+    if "tail" in stage_cache:
+        out["tail"] = jax.tree.map(lambda a: a[s0:s1], stage_cache["tail"])
+    return out
+
+
+def _concat_rows(stage_caches: list[dict]) -> dict:
+    out = {"blocks": jax.tree.map(lambda *ys: jnp.concatenate(ys, axis=1),
+                                  *[c["blocks"] for c in stage_caches])}
+    if "tail" in stage_caches[0]:
+        out["tail"] = jax.tree.map(lambda *ys: jnp.concatenate(ys, axis=0),
+                                   *[c["tail"] for c in stage_caches])
+    return out
+
+
+class StagedLM:
+    def __init__(self, model: LM, num_stages: int):
+        assert not model.cfg.is_encoder_decoder, "stage split is decoder-only"
+        self.model = model
+        g = model.groups
+        num_stages = min(num_stages, g)
+        base, rem = divmod(g, num_stages)
+        bounds, s = [], 0
+        for i in range(num_stages):
+            e = s + base + (1 if i < rem else 0)
+            bounds.append((s, e))
+            s = e
+        self.bounds = bounds                  # group ranges per stage
+        self.num_stages = num_stages
+        self._stage_fns: dict[int, Any] = {}
+
+    # ------------------------------------------------------------- slicing
+    def stage_params(self, params, si: int) -> dict:
+        g0, g1 = self.bounds[si]
+        sp = {"blocks": _tree_slice(params["blocks"], g0, g1)}
+        if si == self.num_stages - 1 and "tail" in params:
+            sp["tail"] = params["tail"]
+        return sp
+
+    def stage_caches(self, caches, si: int) -> dict:
+        g0, g1 = self.bounds[si]
+        sc = {"blocks": _tree_slice(caches["blocks"], g0, g1)}
+        if si == self.num_stages - 1 and "tail" in caches:
+            sc["tail"] = caches["tail"]
+        return sc
+
+    def merge_caches(self, stage_caches: list[dict]) -> dict:
+        blocks = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                              *[c["blocks"] for c in stage_caches])
+        out = {"blocks": blocks}
+        if "tail" in stage_caches[-1]:
+            out["tail"] = stage_caches[-1]["tail"]
+        return out
+
+    # ------------------------------------------------------------- programs
+    def embed_fn(self):
+        model = self.model
+
+        def f(params_embed, tokens):
+            return L.embed_apply(params_embed, tokens, model.cfg)
+
+        return jax.jit(f)
+
+    def head_fn(self):
+        model = self.model
+
+        def f(params, x):
+            x = L.rmsnorm(params["final_norm"], x, model.cfg.norm_eps)
+            return L.unembed_logits(params["embed"], x, model.cfg)[:, 0]
+
+        return jax.jit(f)
+
+    def stage_fn(self, si: int):
+        """jitted decode step for stage si: (stage_params, x, pos, caches) ->
+        (x, new_caches)."""
+        if si in self._stage_fns:
+            return self._stage_fns[si]
+        model = self.model
+        last = si == self.num_stages - 1
+
+        def f(sp, x, pos, sc):
+            positions = pos[:, None]
+
+            def body(carry, xs):
+                x = carry
+                gparams, gcache = xs
+                new_entries = {}
+                for j in range(model.period):
+                    x, nc, _ = model._block(
+                        gparams[f"m{j}"], x, model.kinds[j], model.moes[j],
+                        mode="decode", positions=positions,
+                        cache=gcache[f"m{j}"], pos=pos, prefix_len=0,
+                        max_len=0, shd=L._noop_shd)
+                    new_entries[f"m{j}"] = nc
+                return x, new_entries
+
+            x, blocks = jax.lax.scan(body, x, (sp["blocks"], sc["blocks"]))
+            out = {"blocks": blocks}
+            if last and "tail" in sp:
+                tail = {}
+                for i in model.tail_layers:
+                    x, nc, _ = model._block(
+                        sp["tail"][f"t{i}"], x, model.cfg.layer_kind(i),
+                        model.cfg.layer_is_moe(i), mode="decode",
+                        positions=positions, cache=sc["tail"][f"t{i}"],
+                        pos=pos, prefix_len=0, max_len=0, shd=L._noop_shd)
+                    tail[f"t{i}"] = nc
+                out["tail"] = tail
+            return x, out
+
+        self._stage_fns[si] = jax.jit(f, donate_argnums=(3,))
+        return self._stage_fns[si]
+
+
+# --------------------------------------------------------------------- pipe
+@dataclasses.dataclass
+class StageReplica:
+    sid: int
+    idx: int
+    params: Any              # stage param slice (shared arrays)
+    ready_at: float = 0.0
+
+
+class StagePipeline:
+    """Decode executor with per-stage replica sets + profiling.
+
+    Batch rows are split across a stage's ready replicas (the paper's
+    horizontal-scaling mechanism); per-stage wall latency feeds the profiler
+    under 'stage/<i>'.
+    """
+
+    def __init__(self, model: LM, params, num_stages: int,
+                 profiler: Profiler | None = None):
+        self.staged = StagedLM(model, num_stages)
+        self.params = params
+        self.profiler = profiler or Profiler()
+        self.replicas: list[list[StageReplica]] = [
+            [StageReplica(s, 0, self.staged.stage_params(params, s))]
+            for s in range(self.staged.num_stages)]
+        self._embed = self.staged.embed_fn()
+        self._head = self.staged.head_fn()
+
+    def scale_stage(self, sid: int, n: int, now: float, cold_start_s: float = 0.0):
+        cur = self.replicas[sid]
+        while len(cur) < n:
+            cur.append(StageReplica(sid, len(cur),
+                                    self.staged.stage_params(self.params, sid),
+                                    ready_at=now + cold_start_s))
+        del cur[n:]
+
+    def decode_step(self, tokens, pos, caches, now: float | None = None):
+        """tokens (B,1), pos (B,), full cache tree -> (logits, new caches)."""
+        now = time.perf_counter() if now is None else now
+        x = self._embed(self.params["embed"], tokens)
+        new_stage_caches = []
+        for si in range(self.staged.num_stages):
+            sc = self.staged.stage_caches(caches, si)
+            ready = [r for r in self.replicas[si] if r.ready_at <= now]
+            ready = ready or self.replicas[si][:1]
+            fn = self.staged.stage_fn(si)
+            t0 = time.perf_counter()
+            if len(ready) == 1:
+                x, nc = fn(ready[0].params, x, pos, sc)
+            else:
+                # split rows across replicas; each runs the same program on
+                # its shard (on real hardware these run concurrently)
+                B = x.shape[0]
+                per = -(-B // len(ready))
+                outs, ncs = [], []
+                for k, r in enumerate(ready):
+                    s0, s1 = k * per, min((k + 1) * per, B)
+                    if s0 >= s1:
+                        break
+                    xs, nck = fn(r.params, x[s0:s1], pos[s0:s1],
+                                 _slice_rows(sc, s0, s1))
+                    outs.append(xs)
+                    ncs.append(nck)
+                x = jnp.concatenate(outs, axis=0)
+                nc = _concat_rows(ncs)
+            dt = time.perf_counter() - t0
+            self.profiler.observe_latency(f"stage/{si}", now, dt)
+            new_stage_caches.append(nc)
+        logits = self._head(self.params, x)
+        return logits, self.staged.merge_caches(new_stage_caches)

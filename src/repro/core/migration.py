@@ -1,0 +1,100 @@
+"""Transparent request migration (paper §3 'Migration technology').
+
+Llumnix/DistServe-inspired: live requests move between replicas to
+(a) rebalance load, (b) drain stragglers/failing nodes, (c) defragment KV
+capacity.  The decision layer is shared by the simulator and the real
+engines; the handoff itself is InferenceEngine.extract_row/adopt with a
+transfer-time cost model:
+
+    t_handoff = kv_bytes / bw + overhead
+
+bw = NVLink-class intra-node (the paper's testbed) or ICI/DCN on TPU pods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.serving.engine import InferenceEngine
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class MigrationConfig:
+    imbalance_threshold: float = 0.35   # (max-min)/capacity occupancy gap
+    straggler_speed: float = 0.5        # below this, drain the replica
+    bandwidth_Bps: float = 200e9        # NVLink-ish; TPU ICI ~50e9/link
+    overhead_s: float = 0.010
+    max_concurrent: int = 2
+
+
+@dataclasses.dataclass
+class MigrationEvent:
+    t: float
+    rid: int
+    src: int
+    dst: int
+    bytes: int
+    duration_s: float
+
+
+class MigrationManager:
+    def __init__(self, cfg: MigrationConfig = MigrationConfig()):
+        self.cfg = cfg
+        self.events: list[MigrationEvent] = []
+
+    # ------------------------------------------------------------ decision
+    def plan(self, occupancies: Sequence[float],
+             speeds: Sequence[float] | None = None) -> list[tuple[int, int]]:
+        """Return (src_replica, dst_replica) moves given per-replica
+        occupancy fractions (and optional speed factors for stragglers)."""
+        n = len(occupancies)
+        if n < 2:
+            return []
+        moves: list[tuple[int, int]] = []
+        occ = list(occupancies)
+        speeds = list(speeds) if speeds is not None else [1.0] * n
+        for _ in range(self.cfg.max_concurrent):
+            # stragglers drain first
+            stragglers = [i for i in range(n)
+                          if speeds[i] < self.cfg.straggler_speed and occ[i] > 0]
+            if stragglers:
+                src = max(stragglers, key=lambda i: occ[i])
+            else:
+                src = max(range(n), key=lambda i: occ[i])
+            dst = min(range(n), key=lambda i: occ[i] if speeds[i] >= 1.0 else 2.0)
+            if src == dst:
+                break
+            if not stragglers and occ[src] - occ[dst] < self.cfg.imbalance_threshold:
+                break
+            moves.append((src, dst))
+            delta = 1.0 / max(n, 1)
+            occ[src] -= delta
+            occ[dst] += delta
+        return moves
+
+    def transfer_time(self, nbytes: int) -> float:
+        return nbytes / self.cfg.bandwidth_Bps + self.cfg.overhead_s
+
+    # ------------------------------------------------------------ execution
+    def migrate(self, src: InferenceEngine, dst: InferenceEngine, rid: int,
+                now: float, src_idx: int = 0, dst_idx: int = 1) -> MigrationEvent | None:
+        """Real engine-to-engine handoff (same model config/max_len)."""
+        nbytes = src.kv_bytes(rid)
+        req, payload = src.extract_row(rid)
+        if not dst.adopt(req, payload, now):
+            # destination full: roll back
+            assert src.adopt(req, payload, now), "rollback failed"
+            return None
+        ev = MigrationEvent(now, rid, src_idx, dst_idx, nbytes,
+                            self.transfer_time(nbytes))
+        self.events.append(ev)
+        return ev
+
+    def pick_request(self, eng: InferenceEngine) -> int | None:
+        """Cheapest-to-move live request (smallest progress => smallest
+        dead time); ties by shortest remaining work."""
+        if not eng.row_req:
+            return None
+        req = min(eng.row_req.values(), key=lambda r: len(r.output))
+        return req.rid

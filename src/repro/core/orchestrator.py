@@ -1,0 +1,145 @@
+"""Orchestrator: the full cloud-native control loop over real engines.
+
+Ties the six paper modules together for a replica set of
+:class:`InferenceEngine` instances (each one a model replica, as Kubernetes
+would run one pod per replica):
+
+  profiler   <- per-step engine telemetry
+  predictor  -> arrival-rate forecast
+  autoscaler -> replica count (HPA law, cold start = engine build time)
+  balancer   -> request routing across replicas
+  migration  -> drain/rebalance live requests
+
+The same loop drives the simulator through ``SimCluster`` (benchmarks) —
+this module is the *real-engine* backend used by examples and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+from repro.core.autoscaler import Autoscaler, HPAConfig
+from repro.core.loadbalancer import LoadBalancer
+from repro.core.migration import MigrationConfig, MigrationManager
+from repro.core.predictor import make_predictor
+from repro.core.profiler import Profiler
+from repro.serving.engine import InferenceEngine
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class OrchestratorConfig:
+    min_replicas: int = 1
+    max_replicas: int = 4
+    hpa: HPAConfig = dataclasses.field(default_factory=lambda: HPAConfig(
+        metric="queue", target=4.0, max_replicas=4, stabilization_s=5.0,
+        scale_down_cooldown_s=5.0))
+    migration: MigrationConfig = dataclasses.field(default_factory=MigrationConfig)
+    lb_policy: str = "least"
+    control_every_steps: int = 4
+    predictor: str = "holt"
+    cold_start_steps: int = 0       # extra steps before a new replica serves
+
+
+class Orchestrator:
+    def __init__(self, make_engine: Callable[[], InferenceEngine],
+                 cfg: OrchestratorConfig = OrchestratorConfig()):
+        self.cfg = cfg
+        self.make_engine = make_engine
+        self.engines: list[InferenceEngine] = [make_engine()
+                                               for _ in range(cfg.min_replicas)]
+        self._cold: dict[int, int] = {}
+        self.profiler = Profiler()
+        self.autoscaler = Autoscaler(cfg.hpa, make_predictor(cfg.predictor))
+        self.balancer = LoadBalancer(cfg.lb_policy)
+        self.migrations = MigrationManager(cfg.migration)
+        self._steps = 0
+        self.scale_history: list[tuple[float, int]] = []
+
+    # ------------------------------------------------------------- routing
+    def submit(self, req: Request, now: float | None = None) -> None:
+        now = time.perf_counter() if now is None else now
+        live = [e for i, e in enumerate(self.engines) if self._cold.get(i, 0) <= 0]
+        eng = self.balancer.pick(live, load=lambda e: e.pending())
+        req.replica = self.engines.index(eng)
+        eng.submit(req, now)
+
+    # ------------------------------------------------------------- control
+    def _control(self, now: float) -> None:
+        depth = sum(e.scheduler.depth() for e in self.engines)
+        occ = sum(e.pool.used for e in self.engines)
+        self.profiler.observe_util("cluster", now,
+                                   occ / max(1, sum(e.capacity for e in self.engines)))
+        cur = len(self.engines)
+        new = self.autoscaler.evaluate(now, cur, float(depth))
+        if new > cur:
+            for i in range(new - cur):
+                self.engines.append(self.make_engine())
+                self._cold[len(self.engines) - 1] = self.cfg.cold_start_steps
+            self.scale_history.append((now, new))
+        elif new < cur:
+            # retire emptiest engines; migrate their live requests out first.
+            # An engine that cannot be fully drained (targets full) survives
+            # until a later tick — requests are never dropped.
+            victims = sorted(range(cur), key=lambda i: self.engines[i].pool.used)
+            victims = victims[: cur - new]
+            keep = [i for i in range(cur) if i not in victims]
+            removed = []
+            for v in victims:
+                self._drain(v, keep, now)
+                if self.engines[v].pool.used == 0 and \
+                        self.engines[v].scheduler.depth() == 0:
+                    removed.append(v)
+            if removed:
+                self.engines = [e for i, e in enumerate(self.engines)
+                                if i not in removed]
+                self._cold = {}
+                self.scale_history.append((now, len(self.engines)))
+
+        # load-imbalance migration between kept engines
+        if len(self.engines) >= 2:
+            occs = [e.pool.used / e.capacity for e in self.engines]
+            for src, dst in self.migrations.plan(occs):
+                rid = self.migrations.pick_request(self.engines[src])
+                if rid is not None:
+                    self.migrations.migrate(self.engines[src], self.engines[dst],
+                                            rid, now, src, dst)
+
+    def _drain(self, victim: int, keep: list[int], now: float) -> None:
+        src = self.engines[victim]
+        for rid in [r.rid for r in list(src.row_req.values())]:
+            for k in keep:
+                ev = self.migrations.migrate(src, self.engines[k], rid, now,
+                                             victim, k)
+                if ev is not None:
+                    break
+        # requeue anything still queued
+        while src.scheduler.queue:
+            req = src.scheduler.queue.popleft()
+            self.submit(req, now)
+
+    # ------------------------------------------------------------- stepping
+    def step(self, now: float | None = None) -> None:
+        now = time.perf_counter() if now is None else now
+        for i, eng in enumerate(self.engines):
+            if self._cold.get(i, 0) > 0:
+                self._cold[i] -= 1
+                continue
+            st = eng.step(now)
+            self.profiler.observe_latency(f"engine/{i}/decode", now, st.decode_s)
+        self._steps += 1
+        if self._steps % self.cfg.control_every_steps == 0:
+            self._control(now)
+
+    def pending(self) -> int:
+        return sum(e.pending() for e in self.engines)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        while self.pending() and max_steps > 0:
+            self.step()
+            max_steps -= 1
+        out = []
+        for e in self.engines:
+            out.extend(e.finished)
+        return out

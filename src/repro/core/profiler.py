@@ -1,0 +1,128 @@
+"""Application profiling (paper §3 'Application profiling').
+
+Emulates the Prometheus/Grafana pipeline: sliding-window metric store with
+per-target (layer / stage / replica) latency histograms sampled on the event
+clock, percentile queries, right-skew detection, and bottleneck ranking —
+the input to load balancing, autoscaling and migration decisions.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+from collections import defaultdict, deque
+
+
+@dataclasses.dataclass
+class Sample:
+    t: float
+    value: float
+
+
+class SeriesWindow:
+    """Sliding time window of float samples with percentile queries."""
+
+    def __init__(self, window_s: float = 15.0):
+        self.window_s = window_s
+        self._q: deque[Sample] = deque()
+
+    def observe(self, t: float, value: float) -> None:
+        self._q.append(Sample(t, value))
+        self._evict(t)
+
+    def _evict(self, now: float) -> None:
+        while self._q and self._q[0].t < now - self.window_s:
+            self._q.popleft()
+
+    def values(self, now: float | None = None) -> list[float]:
+        if now is not None:
+            self._evict(now)
+        return [s.value for s in self._q]
+
+    def percentile(self, p: float, now: float | None = None) -> float:
+        vals = sorted(self.values(now))
+        if not vals:
+            return 0.0
+        i = min(len(vals) - 1, max(0, math.ceil(p / 100.0 * len(vals)) - 1))
+        return vals[i]
+
+    def mean(self, now: float | None = None) -> float:
+        v = self.values(now)
+        return sum(v) / len(v) if v else 0.0
+
+    def max(self, now: float | None = None) -> float:
+        v = self.values(now)
+        return max(v) if v else 0.0
+
+    def count(self, now: float | None = None) -> int:
+        return len(self.values(now))
+
+    def rate(self, now: float) -> float:
+        """Samples per second over the window."""
+        return self.count(now) / self.window_s
+
+    def skewness(self, now: float | None = None) -> float:
+        """Right-skew indicator: (max - median) / (median - min) proxy, plus
+        Fisher skewness when the window has enough mass."""
+        v = sorted(self.values(now))
+        if len(v) < 3:
+            return 0.0
+        n = len(v)
+        mean = sum(v) / n
+        sd = math.sqrt(sum((x - mean) ** 2 for x in v) / n) or 1e-12
+        return sum((x - mean) ** 3 for x in v) / n / sd ** 3
+
+
+class Profiler:
+    """Per-target metric store.  Targets are free-form strings
+    ('layer/27', 'stage/3/replica/0', 'engine/decode')."""
+
+    def __init__(self, window_s: float = 15.0):
+        self.window_s = window_s
+        self.latency: dict[str, SeriesWindow] = defaultdict(
+            lambda: SeriesWindow(window_s))
+        self.util: dict[str, SeriesWindow] = defaultdict(
+            lambda: SeriesWindow(window_s))
+        self.alltime_max: dict[str, float] = defaultdict(float)
+        self.alltime_count: dict[str, int] = defaultdict(int)
+
+    # ------------------------------------------------------------- ingest
+    def observe_latency(self, target: str, t: float, seconds: float) -> None:
+        self.latency[target].observe(t, seconds)
+        self.alltime_max[target] = max(self.alltime_max[target], seconds)
+        self.alltime_count[target] += 1
+
+    def observe_util(self, target: str, t: float, frac: float) -> None:
+        self.util[target].observe(t, frac)
+
+    # ------------------------------------------------------------- queries
+    def p(self, target: str, pct: float, now: float | None = None) -> float:
+        return self.latency[target].percentile(pct, now)
+
+    def mean_util(self, target: str, now: float | None = None) -> float:
+        return self.util[target].mean(now)
+
+    def bottlenecks(self, prefix: str = "", now: float | None = None,
+                    metric: str = "max") -> list[tuple[str, float]]:
+        """Targets ranked by descending latency metric (paper Fig. 3)."""
+        rows = []
+        for tgt, w in self.latency.items():
+            if not tgt.startswith(prefix):
+                continue
+            v = self.alltime_max[tgt] if metric == "alltime_max" else \
+                (w.max(now) if metric == "max" else w.percentile(99, now))
+            rows.append((tgt, v))
+        return sorted(rows, key=lambda r: -r[1])
+
+    def right_skewed(self, target: str, now: float | None = None,
+                     threshold: float = 1.5) -> bool:
+        return self.latency[target].skewness(now) > threshold
+
+    def hotspot_ratio(self, prefix: str = "", metric: str = "alltime_max") -> float:
+        """max-latency ratio between the worst and best target (the paper's
+        '230x Layer 27 vs Layer 30' statistic)."""
+        rows = self.bottlenecks(prefix, metric=metric)
+        rows = [r for r in rows if r[1] > 0]
+        if len(rows) < 2:
+            return 1.0
+        return rows[0][1] / rows[-1][1]

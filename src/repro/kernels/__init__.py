@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the serving data path's compute hot spots.
+
+Each subpackage ships kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd wrapper with ref/kernel dispatch) and ref.py (pure-jnp
+oracle).  Validated on CPU with interpret=True (tests/test_kernels.py);
+pass interpret=False on real TPU (PerfConfig.pallas_interpret).
+
+flash_attention/   FA2-style blocked prefill attention (causal, GQA, SWA)
+paged_attention/   decode attention over block-table paged KV
+                   (scalar-prefetch grid: PagedAttention adapted to TPU DMA)
+ssd_scan/          Mamba-2 SSD chunked scan (MXU intra-chunk + VMEM state)
+"""

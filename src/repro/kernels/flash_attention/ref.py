@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    """q: (B,H,Sq,d); k,v: (B,KV,Skv,d).  Returns (B,H,Sq,d) in q.dtype."""
+    B, H, Sq, d = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    rep = H // KV
+    scale = d ** -0.5 if scale is None else scale
+    kx = jnp.repeat(k, rep, axis=1)
+    vx = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(f32), kx.astype(f32)) * scale
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)   # right-aligned positions
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e29)
+    e = jnp.exp(s - m)
+    w = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(vx.dtype), vx).astype(q.dtype)

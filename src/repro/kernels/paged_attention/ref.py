@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the paged decode-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, context_len, *,
+                        scale: float | None = None):
+    """q: (B,H,d); pools (num_blocks, bs, KV, d); block_table (B, max_blk)
+    int32 (-1 = unused); context_len (B,) valid positions.  -> (B,H,d)."""
+    B, H, d = q.shape
+    nb, bs, KV, _ = k_pages.shape
+    max_blk = block_table.shape[1]
+    rep = H // KV
+    scale = d ** -0.5 if scale is None else scale
+
+    bt = jnp.maximum(block_table, 0)
+    k = k_pages[bt].reshape(B, max_blk * bs, KV, d)      # (B,S,KV,d)
+    v = v_pages[bt].reshape(B, max_blk * bs, KV, d)
+    kx = jnp.repeat(k, rep, axis=2)
+    vx = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(f32), kx.astype(f32)) * scale
+    pos = jnp.arange(max_blk * bs)[None, :]
+    valid = (pos < context_len[:, None]) & \
+        (jnp.repeat(block_table >= 0, bs, axis=1))
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e29)
+    e = jnp.exp(s - m)
+    w = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhs,bshd->bhd", w, vx.astype(f32)).astype(q.dtype)

@@ -1,0 +1,105 @@
+"""Mamba-2 SSD chunked scan for TPU (pl.pallas_call + BlockSpec).
+
+Grid (b, H, nc) with the chunk axis innermost: the inter-chunk state h
+(P x N, fp32) persists in VMEM scratch across the sequential chunk
+iterations while the intra-chunk quadratic term runs on the MXU:
+
+  M   = (C B^T) * L        -- (Q,Q) masked decay kernel
+  y   = M (x*dt) + (C h) * exp(cum)
+  h'  = exp(cum_Q) h + (B * wt)^T (x*dt)
+
+Chunk Q and head dim P are MXU-aligned (Q=128/256, P=64/128); one grid cell
+holds Q x max(P, N) fp32 tiles comfortably in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+f32 = jnp.float32
+
+
+def _kernel(x_ref, b_ref, c_ref, dt_ref, da_ref, y_ref, hout_ref, h_scr, *,
+            Q, P, N, nc):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(f32)          # (Q, P)
+    Bm = b_ref[0, 0].astype(f32)         # (Q, N)
+    Cm = c_ref[0, 0].astype(f32)         # (Q, N)
+    dt = dt_ref[0, 0].astype(f32)        # (Q,)
+    da = da_ref[0, 0].astype(f32)        # (Q,)
+
+    cum = jnp.cumsum(da)                                     # (Q,)
+    seg = cum[:, None] - cum[None, :]                        # (q, t)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ti <= qi, jnp.exp(seg), 0.0)
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=f32)     # (q, t)
+    M = CB * L
+    xdt = x * dt[:, None]                                    # (Q, P)
+    y_in = jax.lax.dot_general(M, xdt, (((1,), (0,)), ((), ())),
+                               preferred_element_type=f32)   # (Q, P)
+    h = h_scr[...]                                           # (P, N)
+    y_off = jax.lax.dot_general(Cm, h, (((1,), (1,)), ((), ())),
+                                preferred_element_type=f32)  # (Q, P)
+    y_off = y_off * jnp.exp(cum)[:, None]
+    y_ref[0, 0] = (y_in + y_off).astype(y_ref.dtype)
+
+    wt = jnp.exp(cum[Q - 1] - cum)                           # (Q,)
+    dh = jax.lax.dot_general(xdt, Bm * wt[:, None], (((0,), (0,)), ((), ())),
+                             preferred_element_type=f32)     # (P, N)
+    h_scr[...] = h * jnp.exp(cum[Q - 1]) + dh
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        hout_ref[0, 0] = h_scr[...]
+
+
+def ssd_scan(x, B, C, dt, da, *, chunk: int = 128, interpret: bool = True):
+    """x (b,S,H,P); B,C (b,S,H,N) group-expanded; dt,da (b,S,H) f32.
+    Returns (y (b,S,H,P) f32, h_last (b,H,P,N) f32)."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    # kernel layout: head-major so one grid cell streams (Q,P)/(Q,N) tiles
+    xt = x.transpose(0, 2, 1, 3)          # (b,H,S,P)
+    Bt = B.transpose(0, 2, 1, 3)          # (b,H,S,N)
+    Ct = C.transpose(0, 2, 1, 3)
+    dtt = dt.transpose(0, 2, 1)           # (b,H,S)
+    dat = da.transpose(0, 2, 1)
+
+    kern = functools.partial(_kernel, Q=Q, P=P, N=N, nc=nc)
+    y, h_last = pl.pallas_call(
+        kern,
+        grid=(b, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda i, h, c: (i, h, c, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda i, h, c: (i, h, c, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda i, h, c: (i, h, c, 0)),
+            pl.BlockSpec((1, 1, Q), lambda i, h, c: (i, h, c)),
+            pl.BlockSpec((1, 1, Q), lambda i, h, c: (i, h, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda i, h, c: (i, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda i, h, c: (i, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, H, S, P), f32),
+            jax.ShapeDtypeStruct((b, H, P, N), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), f32)],
+        interpret=interpret,
+    )(xt, Bt, Ct, dtt, dat)
+    return y.transpose(0, 2, 1, 3), h_last

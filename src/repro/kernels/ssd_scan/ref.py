@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the SSD chunked-scan kernel.
+
+Computes the Mamba-2 state-space-dual recurrence over pre-activated inputs:
+  h_t = exp(da_t) h_{t-1} + dt_t B_t x_t^T          (per head)
+  y_t = C_t h_t
+chunked exactly like models/mamba.ssd_apply_full (same math, no conv/gating
+— the kernel covers the scan hot loop only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def ssd_scan_ref(x, B, C, dt, da, *, chunk: int):
+    """x (b,S,H,P); B,C (b,S,H,N) [group-expanded]; dt,da (b,S,H) f32.
+    Returns (y (b,S,H,P) f32, h_last (b,H,P,N) f32)."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = chunk
+    assert S % Q == 0
+    nc = S // Q
+
+    def chunkify(t):
+        return t.reshape(b, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    xq, Bq, Cq, dtq, daq = map(chunkify, (x, B, C, dt, da))
+
+    def body(h, inp):
+        xk, Bk, Ck, dtk, dak = inp
+        cum = jnp.cumsum(dak, axis=1)                       # (b,Q,H)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]       # (b,q,t,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        CB = jnp.einsum("bqhn,bthn->bqth", Ck.astype(f32), Bk.astype(f32))
+        M = CB * L
+        xdt = x_ = xk.astype(f32) * dtk[..., None]
+        y_in = jnp.einsum("bqth,bthp->bqhp", M, xdt)
+        y_off = jnp.einsum("bqhn,bhpn->bqhp", Ck.astype(f32), h) \
+            * jnp.exp(cum)[..., None]
+        wt = jnp.exp(cum[:, -1:, :] - cum)
+        h_new = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + jnp.einsum(
+            "bthn,bthp->bhpn", Bk.astype(f32) * wt[..., None], xdt)
+        return h_new, y_in + y_off
+
+    h0 = jnp.zeros((b, H, P, N), f32)
+    h_last, ys = jax.lax.scan(body, h0, (xq, Bq, Cq, dtq, daq))
+    return ys.swapaxes(0, 1).reshape(b, S, H, P), h_last

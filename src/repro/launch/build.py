@@ -1,0 +1,110 @@
+"""Cell builder: (arch x shape x mesh x perf) -> jitted fn + abstract args.
+
+Shared by the dry-run, the roofline benchmark, and integration tests so the
+lowered program is byte-identical across all three.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.perf import BASELINE, PerfConfig
+from repro.distributed.sharding import Sharder, opt_sharding_tree, rules_for
+from repro.launch import specs as SP
+from repro.models import params as P
+from repro.models.lm import make_model
+from repro.training import optimizer as OPT
+from repro.training.steps import make_decode_step, make_prefill_step, make_train_step
+
+
+def default_perf(cfg: ModelConfig, shape: ShapeConfig, base: PerfConfig = BASELINE) -> PerfConfig:
+    """Napkin-math microbatch default: keep the per-device per-scan-step
+    activation boundary (m * S * D * 2 / data) under ~128 MB."""
+    perf = base
+    if shape.kind == "train":
+        data = 16
+        budget = 128e6
+        m_max = max(1, int(budget * data / (shape.seq_len * cfg.d_model * 2)))
+        m = 1 << int(math.log2(m_max)) if m_max >= 1 else 1
+        m = min(m, shape.global_batch)
+        while shape.global_batch % m:
+            m //= 2
+        n_micro = shape.global_batch // m
+        perf = dataclasses.replace(perf, microbatch=n_micro)
+    return perf
+
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    perf: PerfConfig
+    mesh: Any
+    fn: Any                      # python step fn
+    jitted: Any                  # jax.jit(fn, shardings...)
+    abstract_args: tuple         # ShapeDtypeStructs to lower with
+    model: Any
+    sharder: Sharder
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, perf: PerfConfig | None = None) -> Cell:
+    perf = perf if perf is not None else default_perf(cfg, shape)
+    sharder = Sharder(mesh, rules_for(perf.partitioning)) if mesh is not None else Sharder(None)
+    shd = sharder if mesh is not None else (lambda x, names: x)
+
+    if shape.kind == "train":
+        model, fn = make_train_step(cfg, perf, shd=shd)
+        pspecs = model.param_specs()
+        params_abs = P.abstract(pspecs)
+        opt_abs = P.abstract(OPT.opt_state_specs(pspecs))
+        batch_abs = SP.batch_specs(cfg, shape, with_labels=True)
+        in_sh = None
+        if mesh is not None:
+            in_sh = (sharder.spec_shardings(pspecs),
+                     opt_sharding_tree(sharder, pspecs),
+                     sharder.batch_shardings(batch_abs))
+        jitted = jax.jit(fn, in_shardings=in_sh,
+                         donate_argnums=(0, 1) if perf.donate else ())
+        return Cell(cfg, shape, perf, mesh, fn, jitted,
+                    (params_abs, opt_abs, batch_abs), model, sharder)
+
+    if shape.kind == "prefill":
+        model, fn = make_prefill_step(cfg, shape.seq_len, perf, shd=shd)
+        pspecs = model.param_specs()
+        params_abs = P.abstract(pspecs)
+        batch_abs = SP.batch_specs(cfg, shape, with_labels=False)
+        in_sh = None
+        if mesh is not None:
+            in_sh = (sharder.spec_shardings(pspecs),
+                     sharder.batch_shardings(batch_abs))
+        jitted = jax.jit(fn, in_shardings=in_sh)
+        return Cell(cfg, shape, perf, mesh, fn, jitted,
+                    (params_abs, batch_abs), model, sharder)
+
+    # decode
+    model, fn = make_decode_step(cfg, perf, shd=shd)
+    pspecs = model.param_specs()
+    params_abs = P.abstract(pspecs)
+    dspec = SP.decode_specs(cfg, shape, model, perf)
+    in_sh = None
+    if mesh is not None:
+        tok_sh = NamedSharding(mesh, sharder.spec_for((shape.global_batch, 1), ("batch", None)))
+        pos_sh = NamedSharding(mesh, sharder.spec_for((shape.global_batch,), ("batch",)))
+        in_sh = (sharder.spec_shardings(pspecs), tok_sh, pos_sh,
+                 sharder.spec_shardings(dspec["cache_param_specs"]))
+    jitted = jax.jit(fn, in_shardings=in_sh,
+                     donate_argnums=(3,) if perf.donate else ())
+    return Cell(cfg, shape, perf, mesh, fn, jitted,
+                (params_abs, dspec["tokens"], dspec["pos"], dspec["caches"]),
+                model, sharder)
+
+
+def lower_cell(cell: Cell):
+    with (cell.mesh or jax.sharding.Mesh(jax.devices()[:1], ("_",))):
+        return cell.jitted.lower(*cell.abstract_args)

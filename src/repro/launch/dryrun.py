@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import: jax locks the device count on first init.
+
+# Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+#
+# For each cell we record (to stdout and --out JSONL):
+#   * memory_analysis()  — per-device bytes: proves the cell fits 16 GiB HBM
+#   * cost_analysis()    — HLO flops / bytes accessed (roofline numerators)
+#   * collective bytes   — parsed from the SPMD-partitioned HLO text
+#   * lower/compile wall time
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+#   python -m repro.launch.dryrun --all --mesh both --out benchmarks/out/dryrun.jsonl
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_supported
+from repro.configs.perf import BASELINE, PerfConfig, with_overrides
+from repro.launch import hlo as H
+from repro.launch.build import build_cell, default_perf
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             perf: PerfConfig | None = None, *, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skip", "reason": reason}
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    t0 = time.time()
+    try:
+        cell = build_cell(cfg, shape, mesh, perf)
+        rec["perf"] = {k: getattr(cell.perf, k) for k in
+                       ("microbatch", "remat", "attn_impl", "q_chunk",
+                        "partitioning", "kv_dtype", "accum_dtype")}
+        with mesh:
+            lowered = cell.jitted.lower(*cell.abstract_args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        mem = H.memory_per_device(compiled)
+        xla_flops, xla_bytes = H.flops_bytes(compiled)
+        walk = H.analyze(compiled.as_text())
+        rec.update(status="ok", memory=mem,
+                   flops_per_device=walk["flops_per_device"],
+                   bytes_per_device=walk["bytes_per_device"],
+                   collectives=walk["collectives_per_device"],
+                   xla_flops=xla_flops, xla_bytes=xla_bytes,
+                   fits_hbm=bool(mem["peak_bytes"] <= HBM_BYTES))
+        if verbose:
+            coll = walk["collectives_per_device"]
+            print(f"[{mesh_name}] {arch} x {shape_name}: OK  "
+                  f"peak={mem['peak_bytes']/2**30:.2f}GiB "
+                  f"flops/dev={walk['flops_per_device']:.3e} "
+                  f"bytes/dev={walk['bytes_per_device']:.3e} "
+                  f"coll/dev={coll.get('total',0):.3e}B "
+                  f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
+                  flush=True)
+    except Exception as e:  # a failure here is a bug in our sharding config
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[{mesh_name}] {arch} x {shape_name}: FAIL {type(e).__name__}: {e}",
+                  flush=True)
+    return rec
+
+
+def parse_perf_overrides(pairs: list[str]) -> dict:
+    out = {}
+    for kv in pairs or []:
+        k, v = kv.split("=", 1)
+        fields = PerfConfig.__dataclass_fields__
+        typ = fields[k].type
+        if typ in ("int",):
+            v = int(v)
+        elif typ in ("bool",):
+            v = v.lower() in ("1", "true", "yes")
+        out[k] = v
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="all 40 cells")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--perf", nargs="*", default=None, help="k=v PerfConfig overrides")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCH_IDS) if (args.all or args.arch in (None, "all")) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape in (None, "all")) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    overrides = parse_perf_overrides(args.perf)
+    records, failed = [], 0
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            for shape_name in shapes:
+                perf = None
+                if overrides:
+                    perf = with_overrides(
+                        default_perf(get_config(arch), SHAPES[shape_name]), **overrides)
+                rec = run_cell(arch, shape_name, mesh, mesh_name, perf)
+                records.append(rec)
+                failed += rec["status"] == "fail"
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    okc = sum(r["status"] == "ok" for r in records)
+    skipc = sum(r["status"] == "skip" for r in records)
+    print(f"\ndry-run: {okc} ok, {skipc} documented skips, {failed} failures", flush=True)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

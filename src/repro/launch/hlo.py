@@ -1,0 +1,401 @@
+"""Static analysis of optimized (SPMD-partitioned) HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits each ``while`` body **once** — a
+scan-over-layers program under-reports flops/bytes by the trip count.  The
+roofline needs the real numbers, so we parse the HLO module and walk it:
+
+  * ``flops``  — 2 * prod(out) * contraction for every dot, recursing into
+    fusions / called computations, and multiplying while bodies by their
+    ``known_trip_count`` annotation.
+  * ``bytes``  — HBM-traffic approximation: operand + output bytes of every
+    top-level materializing op (fusions are single units — their internals
+    live in registers/VMEM).  ``dynamic-update-slice``-rooted fusions count
+    the updated slice, not the whole aliased buffer (in-place KV-cache
+    writes would otherwise inflate decode bytes ~100x).
+  * ``collectives`` — per-kind payload bytes with ring wire factors.
+
+All shapes in post-partitioning HLO are **per-device**, so every number this
+module returns is per-chip — exactly the roofline numerator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+# ops that define control/aliasing structure, not HBM traffic
+_CONTROL = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "custom-call", "after-all", "partition-id",
+    "replica-id", "opt-barrier",
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*(.*)$")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(tokens) -> int:
+    return sum(
+        _DTYPE_BYTES.get(dt, 4) * (eval("*".join(dims.split(",")) or "1") if dims else 1)
+        for dt, dims in tokens)
+
+
+def _nelems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    op: str
+    out_tokens: list          # [(dtype, dims), ...]
+    operands: list[str]
+    attrs: str
+    args_raw: str = ""
+
+
+def _parse_op(line: str) -> Op | None:
+    m = _OP_LINE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2).strip()
+    # split shape prefix from op
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        shape_str, tail = rest[: i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape_str, tail = rest[:sp], rest[sp:]
+    om = re.match(r"\s*([\w\-]+)\(", tail)
+    if not om:
+        return None
+    op = om.group(1)
+    # operand names: inside the first balanced parens after the op name
+    start = tail.index("(")
+    depth, j = 0, start
+    for j in range(start, len(tail)):
+        depth += tail[j] == "("
+        depth -= tail[j] == ")"
+        if depth == 0:
+            break
+    args = tail[start + 1: j]
+    operands = re.findall(r"%([^\s,()]+)", args)
+    return Op(name, op, _SHAPE_TOKEN.findall(shape_str), operands, tail[j + 1:], args)
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: dict[str, list[Op]] = {}
+        self.entry: str | None = None
+        cur: list[Op] | None = None
+        for line in text.splitlines():
+            if not line.strip():
+                cur = None
+                continue
+            if not line.startswith((" ", "\t")):
+                hm = _COMP_HDR.match(line)
+                if hm:
+                    cur = []
+                    self.comps[hm.group(2)] = cur
+                    if hm.group(1):
+                        self.entry = hm.group(2)
+                continue
+            if cur is None:
+                continue
+            op = _parse_op(line)
+            if op:
+                cur.append(op)
+        # symbol tables
+        self.shapes: dict[str, dict[str, list]] = {
+            c: {o.name: o.out_tokens for o in ops} for c, ops in self.comps.items()}
+
+    # ------------------------------------------------------------- helpers
+    def _trip(self, op: Op) -> int:
+        m = _TRIP.search(op.attrs)
+        return int(m.group(1)) if m else 1
+
+    def _called(self, op: Op, key: str) -> str | None:
+        m = re.search(key + r"=%?([\w\.\-]+)", op.attrs)
+        return m.group(1) if m else None
+
+    def _dot_flops(self, comp: str, op: Op) -> float:
+        out_elems = sum(_nelems(d) for _, d in op.out_tokens)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+        contraction = 1
+        if m and op.operands:
+            lhs_tokens = self.shapes[comp].get(op.operands[0])
+            if lhs_tokens:
+                dims = lhs_tokens[0][1].split(",") if lhs_tokens[0][1] else []
+                for idx in (m.group(1).split(",") if m.group(1) else []):
+                    i = int(idx)
+                    if i < len(dims):
+                        contraction *= int(dims[i])
+        return 2.0 * out_elems * contraction
+
+    # ------------------------------------------------------------- flops
+    def flops(self, comp: str | None = None, _memo=None) -> float:
+        comp = comp or self.entry
+        _memo = _memo if _memo is not None else {}
+        if comp in _memo:
+            return _memo[comp]
+        total = 0.0
+        _memo[comp] = 0.0  # cycle guard
+        for op in self.comps.get(comp, ()):
+            if op.op == "dot":
+                total += self._dot_flops(comp, op)
+            elif op.op == "convolution":
+                # rough: 2 * out_elems * kernel_elems (no grouping info)
+                out_elems = sum(_nelems(d) for _, d in op.out_tokens)
+                total += 2.0 * out_elems
+            elif op.op == "fusion":
+                c = self._called(op, "calls")
+                if c:
+                    total += self.flops(c, _memo)
+            elif op.op == "while":
+                body = self._called(op, "body")
+                if body:
+                    total += self._trip(op) * self.flops(body, _memo)
+            elif op.op in ("call", "conditional", "async-start"):
+                c = self._called(op, "to_apply") or self._called(op, "calls")
+                if c:
+                    total += self.flops(c, _memo)
+        _memo[comp] = total
+        return total
+
+    # ------------------------------------------------------------- bytes
+    _SLICE_LIKE = {"dynamic-slice", "gather", "slice"}
+
+    def _fusion_param_reads(self, called: str) -> dict[int, float]:
+        """Param index -> bytes actually read, for fusion params consumed by
+        slice-like ops (a dynamic-slice of one layer's params from the
+        [L, ...] scan stack reads the slice, not the stack)."""
+        if not hasattr(self, "_fpr_memo"):
+            self._fpr_memo: dict[str, dict[int, float]] = {}
+        if called in self._fpr_memo:
+            return self._fpr_memo[called]
+        ops = self.comps.get(called, ())
+        param_idx: dict[str, int] = {}
+        alias: dict[str, str] = {}          # bitcast/reshape name -> source
+        for o in ops:
+            if o.op in ("bitcast", "reshape", "copy", "convert") and o.operands:
+                alias[o.name] = o.operands[0]
+        # parameter(N): N sits in the args region (fused computations print
+        # params in topological order, NOT index order)
+        for o in ops:
+            if o.op == "parameter" and o.args_raw.strip().isdigit():
+                param_idx[o.name] = int(o.args_raw.strip())
+        reads: dict[int, float] = {}
+        consumed_elsewhere: dict[int, bool] = {}
+        for o in ops:
+            if o.op in ("parameter", "bitcast", "reshape"):
+                continue
+            for pos, src in enumerate(o.operands):
+                seen = set()
+                while src in alias and src not in seen:
+                    seen.add(src)
+                    src = alias[src]
+                if src not in param_idx:
+                    continue
+                i = param_idx[src]
+                if o.op in self._SLICE_LIKE and pos == 0:
+                    reads[i] = reads.get(i, 0.0) + _shape_bytes(o.out_tokens)
+                else:
+                    consumed_elsewhere[i] = True
+        # a param also read at full shape elsewhere: fall back to full size
+        out = {i: b for i, b in reads.items() if not consumed_elsewhere.get(i)}
+        self._fpr_memo[called] = out
+        return out
+
+    def _op_bytes(self, comp: str, op: Op) -> float:
+        table = self.shapes[comp]
+        out_b = _shape_bytes(op.out_tokens)
+        if op.op in self._SLICE_LIKE:
+            return 2.0 * out_b                      # read slice + write slice
+        if op.op == "dynamic-update-slice":
+            upd = table.get(op.operands[1], ()) if len(op.operands) > 1 else ()
+            return 2.0 * _shape_bytes(upd)          # in-place slice write
+        if op.op in ("broadcast", "iota"):
+            return out_b
+        in_b = sum(_shape_bytes(table.get(o, ())) for o in op.operands)
+        if op.op == "fusion":
+            c = self._called(op, "calls")
+            if c:
+                # slice-consumed params: count the slice, not the buffer
+                sliced = self._fusion_param_reads(c)
+                for i, o in enumerate(op.operands):
+                    if i in sliced:
+                        in_b -= _shape_bytes(table.get(o, ()))
+                        in_b += sliced[i]
+                # in-place dynamic-update-slice root: slice write + drop the
+                # aliased big operand from the read side
+                for inner in self.comps.get(c, ()):
+                    if inner.op == "dynamic-update-slice" and \
+                            _shape_bytes(inner.out_tokens) == out_b:
+                        upd = self.shapes[c].get(inner.operands[1], ()) \
+                            if len(inner.operands) > 1 else ()
+                        return max(0.0, in_b - out_b) + 2.0 * _shape_bytes(upd)
+        return in_b + out_b
+
+    def bytes_accessed(self, comp: str | None = None, _memo=None) -> float:
+        comp = comp or self.entry
+        _memo = _memo if _memo is not None else {}
+        if comp in _memo:
+            return _memo[comp]
+        total = 0.0
+        _memo[comp] = 0.0
+        for op in self.comps.get(comp, ()):
+            if op.op == "while":
+                body, cond = self._called(op, "body"), self._called(op, "condition")
+                t = self._trip(op)
+                if body:
+                    total += t * self.bytes_accessed(body, _memo)
+                if cond:
+                    total += t * self.bytes_accessed(cond, _memo)
+            elif op.op in ("call", "conditional"):
+                c = self._called(op, "to_apply") or self._called(op, "calls")
+                if c:
+                    total += self.bytes_accessed(c, _memo)
+            elif op.op in _CONTROL or op.op.startswith(COLLECTIVE_OPS):
+                continue
+            else:
+                total += self._op_bytes(comp, op)
+        _memo[comp] = total
+        return total
+
+    # ------------------------------------------------------------- comms
+    def collectives(self, comp: str | None = None, mult: float = 1.0,
+                    acc=None) -> dict:
+        """Per-kind *wire* bytes per device (ring factors applied)."""
+        comp = comp or self.entry
+        acc = acc if acc is not None else defaultdict(float)
+        for op in self.comps.get(comp, ()):
+            base = op.op.replace("-start", "")
+            if base in COLLECTIVE_OPS:
+                out_b = _shape_bytes(op.out_tokens)
+                g = None
+                m = _GROUPS.search(op.attrs)
+                if m:
+                    g = int(m.group(2))
+                else:
+                    m2 = _GROUPS_OLD.search(op.attrs)
+                    if m2:
+                        g = len(m2.group(1).split(","))
+                g = g or 2
+                if base == "all-reduce":
+                    wire = 2.0 * out_b * (g - 1) / g
+                elif base == "all-gather":
+                    wire = out_b * (g - 1) / g
+                elif base == "reduce-scatter":
+                    wire = out_b * (g - 1)
+                elif base == "all-to-all":
+                    wire = out_b * (g - 1) / g
+                else:  # permute / broadcast
+                    wire = out_b
+                acc[base] += mult * wire
+                acc[base + "_payload"] += mult * out_b
+                acc["count"] += mult
+            elif op.op == "while":
+                body = self._called(op, "body")
+                if body:
+                    self.collectives(body, mult * self._trip(op), acc)
+            elif op.op == "fusion":
+                pass  # collectives never live inside fusions
+            elif op.op in ("call", "conditional"):
+                c = self._called(op, "to_apply") or self._called(op, "calls")
+                if c:
+                    self.collectives(c, mult, acc)
+        acc["total"] = sum(v for k, v in acc.items() if k in COLLECTIVE_OPS)
+        return dict(acc)
+
+
+def top_ops(mod: "HloModule", what: str = "bytes", k: int = 15) -> list:
+    """Largest contributors (with while-trip multipliers) for perf debugging.
+    what: 'bytes' | 'collectives'."""
+    acc: dict = defaultdict(float)
+
+    def walk(comp: str, mult: float):
+        for op in mod.comps.get(comp, ()):
+            if op.op == "while":
+                b, c = mod._called(op, "body"), mod._called(op, "condition")
+                t = mod._trip(op)
+                if b:
+                    walk(b, mult * t)
+                if c:
+                    walk(c, mult * t)
+            elif op.op in ("call", "conditional"):
+                c = mod._called(op, "to_apply") or mod._called(op, "calls")
+                if c:
+                    walk(c, mult)
+            elif op.op in _CONTROL:
+                continue
+            elif op.op.replace("-start", "") in COLLECTIVE_OPS:
+                if what == "collectives":
+                    acc[(comp[-30:], op.op, op.name[:48])] += \
+                        mult * _shape_bytes(op.out_tokens)
+            elif what == "bytes":
+                acc[(comp[-30:], op.op, op.name[:48])] += \
+                    mult * mod._op_bytes(comp, op)
+
+    walk(mod.entry, 1.0)
+    return sorted(acc.items(), key=lambda kv: -kv[1])[:k]
+
+
+# --------------------------------------------------------------------- API
+def analyze(hlo_text: str) -> dict:
+    mod = HloModule(hlo_text)
+    return {
+        "flops_per_device": mod.flops(),
+        "bytes_per_device": mod.bytes_accessed(),
+        "collectives_per_device": mod.collectives(),
+    }
+
+
+def flops_bytes(compiled) -> tuple[float, float]:
+    """XLA's own entry-level numbers (while bodies counted once) — reported
+    alongside the walker numbers for comparison."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def memory_per_device(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    arg = int(getattr(ma, "argument_size_in_bytes", 0))
+    out = int(getattr(ma, "output_size_in_bytes", 0))
+    tmp = int(getattr(ma, "temp_size_in_bytes", 0))
+    alias = int(getattr(ma, "alias_size_in_bytes", 0))
+    peak = int(getattr(ma, "peak_memory_in_bytes", 0))
+    return {
+        "argument_bytes": arg, "output_bytes": out, "temp_bytes": tmp,
+        "alias_bytes": alias,
+        "peak_bytes": peak if peak else (arg + out + tmp - alias),
+    }

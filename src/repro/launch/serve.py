@@ -1,0 +1,62 @@
+"""Serving launcher: cloud-native orchestrated engines (reduced, CPU) or
+production-mesh serve-step dry-run.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --requests 12
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-27b --dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--max-replicas", type=int, default=3)
+    ap.add_argument("--dryrun", action="store_true",
+                    help="lower+compile the production decode step and exit")
+    ap.add_argument("--perf", nargs="*", default=[])
+    args = ap.parse_args(argv)
+
+    if args.dryrun:
+        from repro.launch import dryrun as DR
+        return DR.main(["--arch", args.arch, "--shape", "decode_32k",
+                        "--mesh", "single"] +
+                       (["--perf"] + args.perf if args.perf else []))
+
+    from repro.configs import get_config
+    from repro.core.autoscaler import HPAConfig
+    from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+    from repro.serving import InferenceEngine, Request, SamplingParams
+
+    cfg = get_config(args.arch + "-smoke")
+    orch = Orchestrator(
+        lambda: InferenceEngine(cfg, capacity=args.capacity, max_len=64,
+                                buckets=(8, 16), seed=7),
+        OrchestratorConfig(hpa=HPAConfig(metric="queue", target=3.0,
+                                         max_replicas=args.max_replicas,
+                                         tolerance=0.0, stabilization_s=2.0)))
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        orch.submit(Request(
+            rid=i,
+            prompt=[int(x) for x in rng.integers(0, cfg.vocab_size,
+                                                 int(rng.integers(4, 14)))],
+            sampling=SamplingParams(max_new_tokens=6, temperature=0.7,
+                                    top_k=40)))
+    done = orch.run(max_steps=800)
+    print(f"served {len(done)}/{args.requests} requests on "
+          f"{len(orch.engines)} replicas "
+          f"({len(orch.migrations.events)} migrations)")
+    for r in done[:4]:
+        print(f"  rid={r.rid} ttft={r.ttft:.2f}s tokens={len(r.output)}")
+    return 0 if len(done) == args.requests else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,57 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run path).
+
+No device allocation ever happens here; shapes are exact production shapes.
+``decode`` cells lower ``serve_step`` (one new token against a cache sized to
+shape.seq_len); ``train``/``prefill`` lower full sequences.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import params as P
+from repro.models.lm import make_model
+
+i32 = jnp.int32
+bf16 = jnp.bfloat16
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, with_labels: bool) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    text = S - (cfg.num_vision_tokens or 0)
+    d = {"tokens": jax.ShapeDtypeStruct((B, text), i32)}
+    if with_labels:
+        d["labels"] = jax.ShapeDtypeStruct((B, text), i32)
+    if cfg.num_vision_tokens:
+        d["patches"] = jax.ShapeDtypeStruct((B, cfg.num_vision_tokens, cfg.d_model), bf16)
+    if cfg.is_encoder_decoder:
+        d["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), bf16)
+    return d
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, model=None, perf=None) -> dict:
+    """tokens/pos/caches ShapeDtypeStructs for one decode step at context S."""
+    B, S = shape.global_batch, shape.seq_len
+    model = model or make_model(cfg, *( [perf] if perf else [] ))
+    cache_specs = model.cache_specs(B, S)
+    kv_dtype = jnp.dtype(perf.kv_dtype) if perf is not None else bf16
+
+    def to_sds(s: P.ParamSpec):
+        dt = kv_dtype if (s.dtype == bf16 and kv_dtype != bf16) else s.dtype
+        return jax.ShapeDtypeStruct(s.shape, dt)
+
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((B,), i32),
+        "caches": P.tree_map_specs(to_sds, cache_specs),
+        "cache_param_specs": cache_specs,  # for sharding resolution
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model=None, perf=None) -> dict:
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape, with_labels=False)}
+    return decode_specs(cfg, shape, model, perf)

@@ -1,0 +1,56 @@
+"""Training launcher.
+
+CPU (reduced config, real execution):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --steps 50
+
+Production (TPU pod, or dry-run compile check with --dryrun):
+    python -m repro.launch.train --arch gemma3-27b --production \
+        --perf partitioning=zero3 microbatch=1
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--production", action="store_true",
+                    help="full config on the production mesh (TPU pods); on "
+                         "CPU this only makes sense with --dryrun")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="lower+compile the production train step and exit")
+    ap.add_argument("--perf", nargs="*", default=[])
+    args = ap.parse_args(argv)
+
+    if args.production or args.dryrun:
+        # defer to the dry-run machinery (sets device-count env first)
+        from repro.launch import dryrun as DR
+        rc = DR.main(["--arch", args.arch, "--shape", "train_4k",
+                      "--mesh", "single"] +
+                     (["--perf"] + args.perf if args.perf else []))
+        return rc
+
+    from repro.configs import get_config
+    from repro.training.data import DataConfig
+    from repro.training.train_loop import Trainer, TrainConfig
+    cfg = get_config(args.arch + "-smoke")
+    trainer = Trainer(cfg, TrainConfig(steps=args.steps,
+                                       ckpt_every=args.ckpt_every,
+                                       ckpt_dir=args.ckpt_dir, log_every=10),
+                      DataConfig(batch=args.batch, seq_len=args.seq_len))
+    if trainer.start_step:
+        print(f"auto-resumed from step {trainer.start_step}")
+    losses = trainer.run()
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,118 @@
+"""Parameter-spec machinery.
+
+Every model in the zoo declares its parameters as a pytree of
+:class:`ParamSpec` leaves.  From the spec tree we can derive, without ever
+materialising a weight:
+
+* ``abstract(specs)``  -> ShapeDtypeStruct tree (for ``jit.lower`` dry-runs)
+* ``logical_axes(specs)`` -> logical-axis-name tree (for sharding rules)
+* ``init(key, specs)`` -> real arrays (for CPU smoke tests / tiny training)
+
+Repeated layer groups are expressed by :func:`stack` which prepends a
+``"layers"`` axis, matching ``jax.lax.scan``-over-layers execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis vocabulary.  distributed/sharding.py maps these to mesh axes.
+#   layers   - stacked scan axis (never sharded)
+#   embed    - d_model
+#   mlp      - feed-forward hidden
+#   heads    - query heads * head_dim fused or head axis
+#   kv_heads - key/value head axis
+#   qkv      - per-head feature dim
+#   vocab    - vocabulary
+#   experts  - MoE expert axis
+#   conv     - short conv taps
+#   state    - SSM state dim
+#   norm     - norm scales (replicated)
+#   pos      - positional table
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | embed | const
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, specs):
+    return jax.tree.map(fn, specs, is_leaf=is_spec)
+
+
+def stack(specs, n: int):
+    """Prepend a stacked ``layers`` axis of size n to every spec."""
+
+    def _stack(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(s, shape=(n, *s.shape), axes=("layers", *s.axes))
+
+    return tree_map_specs(_stack, specs)
+
+
+def abstract(specs):
+    """ShapeDtypeStruct tree — no allocation (dry-run path)."""
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def logical_axes(specs):
+    return tree_map_specs(lambda s: s.axes, specs)
+
+
+def _path_seed(path) -> int:
+    name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+    return int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "big")
+
+
+def init(key, specs):
+    """Materialise real arrays.  Deterministic per-leaf (path-derived keys)."""
+
+    def _init(path, s: ParamSpec):
+        k = jax.random.fold_in(key, _path_seed(path))
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        if s.init == "const":
+            return jnp.full(s.shape, s.scale, s.dtype)
+        if s.init == "embed":
+            std = s.scale
+            return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(s.dtype)
+        if s.init == "normal":
+            return (jax.random.normal(k, s.shape, jnp.float32) * s.scale).astype(s.dtype)
+        # fan_in: truncated-normal-ish with 1/sqrt(fan_in); fan_in = second-to-last
+        # dim for matrices (stacked axes excluded), last dim for vectors.
+        shape = s.shape
+        # drop leading stacked axes when computing fan-in
+        core = [d for d, a in zip(shape, s.axes) if a != "layers"]
+        fan_in = core[-2] if len(core) >= 2 else core[-1]
+        std = s.scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(s.dtype)
+
+    return jax.tree_util.tree_map_with_path(_init, specs, is_leaf=is_spec)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def count_bytes(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves))

@@ -1,0 +1,202 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed per brief:
+``input_specs()`` provides precomputed frame embeddings (B, encoder_seq, D)).
+
+Encoder: bidirectional attention, learned positions.
+Decoder: causal self-attention + cross-attention to encoder output; decode
+caches hold self-KV plus the per-layer projected cross-KV (computed at
+prefill, immutable afterwards).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.perf import BASELINE, PerfConfig
+from repro.models import layers as L
+from repro.models import params as P
+
+f32 = jnp.float32
+
+
+def _enc_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": L.layernorm_specs(cfg.d_model),
+        "mixer": L.attention_specs(cfg),
+        "ln2": L.layernorm_specs(cfg.d_model),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def _dec_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": L.layernorm_specs(cfg.d_model),
+        "self": L.attention_specs(cfg),
+        "ln_x": L.layernorm_specs(cfg.d_model),
+        "cross": L.attention_specs(cfg, cross=True),
+        "ln2": L.layernorm_specs(cfg.d_model),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+class EncDec:
+    def __init__(self, cfg: ModelConfig, perf: PerfConfig = BASELINE):
+        self.cfg = cfg
+        self.perf = perf
+
+    # ------------------------------------------------------------- specs
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": L.embed_specs(cfg),
+            "enc_pos": {"table": P.ParamSpec((cfg.encoder_seq, cfg.d_model),
+                                             ("pos", "embed"), init="normal", scale=0.02)},
+            "dec_pos": {"table": P.ParamSpec((cfg.max_position, cfg.d_model),
+                                             ("pos", "embed"), init="normal", scale=0.02)},
+            "encoder": P.stack(_enc_block_specs(cfg), cfg.num_encoder_layers),
+            "enc_norm": L.layernorm_specs(cfg.d_model),
+            "decoder": P.stack(_dec_block_specs(cfg), cfg.num_layers),
+            "final_norm": L.layernorm_specs(cfg.d_model),
+        }
+
+    def cache_specs(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        self_kv = L.kv_cache_specs(cfg, batch, max_len, ring=False)
+        cross_kv = L.kv_cache_specs(cfg, batch, cfg.encoder_seq, ring=False)
+        return {
+            "self": P.stack(self_kv, cfg.num_layers),
+            "cross": P.stack(cross_kv, cfg.num_layers),
+        }
+
+    # ------------------------------------------------------------- encoder
+    def encode(self, params, frames, shd=L._noop_shd):
+        """frames: (B, encoder_seq, D) precomputed embeddings (frontend stub)."""
+        cfg, perf = self.cfg, self.perf
+        x = frames.astype(jnp.bfloat16) + params["enc_pos"]["table"].astype(jnp.bfloat16)
+        x = shd(x, ("batch", "act_seq", "embed"))
+
+        def body(x, p):
+            h = L.layernorm(p["ln1"], x, cfg.norm_eps)
+            q, k, v = L._project_qkv(p["mixer"], h, cfg, None, 0.0, with_rope=False)
+            ctx = L.attention_full(q, k, v, causal=False, q_chunk=perf.q_chunk)
+            x = x + L.attn_out(p["mixer"], ctx)
+            h = L.layernorm(p["ln2"], x, cfg.norm_eps)
+            return x + L.mlp_apply(p["mlp"], h, cfg, shd), None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return L.layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+    # ------------------------------------------------------------- decoder
+    def _dec_embed(self, params, tokens, positions):
+        x = L.embed_apply(params["embed"], tokens, self.cfg)
+        pos_emb = jnp.take(params["dec_pos"]["table"], positions, axis=0)
+        return x + pos_emb.astype(x.dtype)
+
+    def _decoder(self, params, x, enc_out, *, mode, caches, pos, shd, max_len):
+        cfg, perf = self.cfg, self.perf
+
+        def body(carry, xs):
+            x = carry
+            p = xs[0]
+            cache = xs[1] if mode == "decode" else None
+            h = L.layernorm(p["ln1"], x, cfg.norm_eps)
+            q, k, v = L._project_qkv(p["self"], h, cfg, None, 0.0, with_rope=False)
+            new_self = None
+            if mode == "decode":
+                new_self = L.cache_write_decode(cache["self"], k, v, pos, ring=False)
+                mask = L.cache_valid_mask(new_self, pos, ring=False, window=0)
+                ctx = L.attention_decode(q, new_self["k"].astype(q.dtype),
+                                         new_self["v"].astype(q.dtype), mask)
+            else:
+                ctx = L.attention_full(q, k, v, causal=True, q_chunk=perf.q_chunk,
+                                       impl=perf.attn_impl)
+                if mode == "prefill":
+                    empty = jax.tree.map(
+                        lambda s: jnp.zeros(s.shape, s.dtype),
+                        P.abstract(L.kv_cache_specs(cfg, x.shape[0], max_len, ring=False)))
+                    new_self = L.cache_write_prefill(empty, k, v, ring=False, window=0)
+            x = x + L.attn_out(p["self"], ctx)
+
+            # cross-attention
+            h = L.layernorm(p["ln_x"], x, cfg.norm_eps)
+            qx = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"])
+            new_cross = None
+            if mode == "decode":
+                ck, cv = cache["cross"]["k"].astype(qx.dtype), cache["cross"]["v"].astype(qx.dtype)
+                new_cross = cache["cross"]
+                ctx = L.attention_full(qx, ck, cv, causal=False, q_chunk=perf.q_chunk)
+            else:
+                ck = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"])
+                cv = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"])
+                ctx = L.attention_full(qx, ck, cv, causal=False, q_chunk=perf.q_chunk)
+                if mode == "prefill":
+                    new_cross = {"k": ck, "v": cv}
+            x = x + L.attn_out(p["cross"], ctx)
+
+            h = L.layernorm(p["ln2"], x, cfg.norm_eps)
+            x = x + L.mlp_apply(p["mlp"], h, cfg, shd)
+            ys = None
+            if mode != "train":
+                ys = {"self": new_self, "cross": new_cross}
+            return x, ys
+
+        fn = body
+        if mode == "train" and perf.remat != "none":
+            fn = jax.checkpoint(body)
+        xs = (params["decoder"],) if mode != "decode" else (params["decoder"],
+                                                            {"self": caches["self"], "cross": caches["cross"]})
+
+        def scan_body(c, s):  # adapt xs tuple
+            return fn(c, s)
+
+        x, ys = jax.lax.scan(scan_body, x, xs)
+        new_caches = None
+        if mode != "train":
+            new_caches = {"self": ys["self"], "cross": ys["cross"]}
+        return x, new_caches
+
+    # ------------------------------------------------------------- public
+    def loss(self, params, batch, shd=L._noop_shd):
+        """batch: frames (B,Te,D) f32/bf16, tokens (B,S), labels (B,S)."""
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"], shd)
+        S = batch["tokens"].shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        x = self._dec_embed(params, batch["tokens"], positions[0])
+        x = shd(x, ("batch", "act_seq", "embed"))
+        x, _ = self._decoder(params, x, enc, mode="train", caches=None, pos=None,
+                             shd=shd, max_len=0)
+        x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+        nll, cnt = L.chunked_xent(params["embed"], x[:, :-1], batch["labels"][:, 1:],
+                                  cfg, shd, chunk=self.perf.xent_chunk)
+        loss = nll / jnp.maximum(cnt.astype(f32), 1.0)
+        return loss, {"nll": nll, "tokens": cnt, "aux": jnp.zeros((), f32)}
+
+    def prefill(self, params, batch, max_len: int, shd=L._noop_shd, true_len=None):
+        cfg = self.cfg
+        enc = self.encode(params, batch["frames"], shd)
+        S = batch["tokens"].shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        x = self._dec_embed(params, batch["tokens"], positions)
+        x = shd(x, ("batch", "act_seq", "embed"))
+        x, caches, = self._decoder(params, x, enc, mode="prefill", caches=None,
+                                   pos=None, shd=shd, max_len=max_len)
+        x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+        if true_len is None:
+            x_last = x[:, -1:]
+        else:
+            li = jnp.maximum(true_len - 1, 0)[:, None, None]
+            x_last = jnp.take_along_axis(x, li, axis=1)
+        logits = L.unembed_logits(params["embed"], x_last, cfg)[:, 0]
+        return logits, caches
+
+    def decode_step(self, params, tokens, pos, caches, shd=L._noop_shd):
+        cfg = self.cfg
+        x = self._dec_embed(params, tokens, pos[:, None])
+        x, caches = self._decoder(params, x, None, mode="decode", caches=caches,
+                                  pos=pos, shd=shd, max_len=0)
+        x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.unembed_logits(params["embed"], x, cfg)[:, 0]
+        return logits, caches

@@ -1,0 +1,270 @@
+"""Continuous-batching inference engine (Orca-style iteration scheduling).
+
+One engine = one model replica on one device slice.  Static shapes
+throughout: a fixed decode batch of ``capacity`` rows over a ``RowPool``,
+prefill bucketed to a few lengths, per-row sampling parameter vectors — so
+the engine never recompiles as the request mix changes.
+
+The control plane (core/) consumes the per-step telemetry this engine
+emits; the same engine class serves as the *real* backend behind the
+cluster simulator's cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.perf import BASELINE, PerfConfig
+from repro.models import params as P
+from repro.models.lm import make_model
+from repro.serving.kv_cache import RowPool
+from repro.serving.request import Request, State
+from repro.serving.sampling import make_sampler
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+def _round_bucket(n: int, buckets: tuple[int, ...]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"prompt length {n} exceeds largest bucket {buckets[-1]}")
+
+
+@dataclasses.dataclass
+class StepStats:
+    t: float
+    decode_s: float
+    prefill_s: float
+    n_prefill: int
+    occupancy: int
+    queue_depth: int
+    tokens_out: int
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, params=None, *,
+                 capacity: int = 8, max_len: int = 128,
+                 perf: PerfConfig = BASELINE,
+                 sched: SchedulerConfig = SchedulerConfig(),
+                 buckets: tuple[int, ...] = (16, 32, 64),
+                 seed: int = 0):
+        self.cfg = cfg
+        self.perf = perf
+        self.model = make_model(cfg, perf)
+        self.capacity = capacity
+        self.max_len = max_len
+        self.buckets = tuple(sorted(buckets))
+        if params is None:
+            params = P.init(jax.random.PRNGKey(seed), self.model.param_specs())
+        self.params = params
+        self.scheduler = Scheduler(sched)
+        self.pool = RowPool(capacity)
+        self.key = jax.random.PRNGKey(seed + 1)
+
+        # device state ------------------------------------------------------
+        cache_specs = self.model.cache_specs(capacity, max_len)
+        self._batch_axes = [s.axes.index("batch")
+                            for s in jax.tree.leaves(cache_specs, is_leaf=P.is_spec)]
+        self.caches = P.init(jax.random.PRNGKey(0), cache_specs)
+        self.tokens = jnp.zeros((capacity, 1), jnp.int32)
+        self.pos = np.zeros((capacity,), np.int32)
+
+        # host-side per-row bookkeeping --------------------------------------
+        self.row_req: dict[int, Request] = {}
+        self._temp = np.zeros((capacity,), np.float32)
+        self._topk = np.zeros((capacity,), np.int32)
+        self._topp = np.ones((capacity,), np.float32)
+
+        # jitted programs -----------------------------------------------------
+        self._sampler = make_sampler()
+        self._decode = jax.jit(
+            lambda p, t, pos, c: self.model.decode_step(p, t, pos, c),
+            donate_argnums=(3,))
+        self._prefill = {}  # bucket -> jit
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self.history: list[StepStats] = []
+        self.finished: list[Request] = []
+
+    # ------------------------------------------------------------- internals
+    def _insert_impl(self, pool_tree, new_tree, row):
+        pl = jax.tree.leaves(pool_tree)
+        nl = jax.tree.leaves(new_tree)
+        out = []
+        for pool, new, ax in zip(pl, nl, self._batch_axes):
+            starts = [0] * pool.ndim
+            starts[ax] = row
+            out.append(jax.lax.dynamic_update_slice(
+                pool, new.astype(pool.dtype), tuple(starts)))
+        return jax.tree.unflatten(jax.tree.structure(pool_tree), out)
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill:
+            def fn(p, batch, true_len):
+                logits, caches = self.model.prefill(p, batch, self.max_len,
+                                                    true_len=true_len)
+                return logits, caches
+            self._prefill[bucket] = jax.jit(fn)
+        return self._prefill[bucket]
+
+    # ------------------------------------------------------------- interface
+    def submit(self, req: Request, now: float | None = None) -> bool:
+        now = time.perf_counter() if now is None else now
+        return self.scheduler.submit(req, now)
+
+    def pending(self) -> int:
+        return self.scheduler.depth() + self.pool.used
+
+    def _admit(self, req: Request, now: float) -> None:
+        row = self.pool.allocate(req.rid)
+        assert row is not None
+        req.row, req.state, req.t_admit = row, State.PREFILL, now
+        bucket = _round_bucket(len(req.prompt), self.buckets)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, : len(req.prompt)] = req.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.num_vision_tokens:
+            batch["patches"] = jnp.asarray(
+                req.extras.get("patches",
+                               np.zeros((1, self.cfg.num_vision_tokens, self.cfg.d_model),
+                                        np.float32)))
+        if self.cfg.is_encoder_decoder:
+            batch["frames"] = jnp.asarray(
+                req.extras.get("frames",
+                               np.zeros((1, self.cfg.encoder_seq, self.cfg.d_model),
+                                        np.float32)))
+        true_len = jnp.asarray([len(req.prompt)], jnp.int32)
+        logits, row_caches = self._prefill_fn(bucket)(self.params, batch, true_len)
+        # first token
+        self.key, sk = jax.random.split(self.key)
+        tok = self._sampler(logits.astype(jnp.float32), sk,
+                            jnp.asarray([req.sampling.temperature], jnp.float32),
+                            jnp.asarray([req.sampling.top_k], jnp.int32),
+                            jnp.asarray([req.sampling.top_p], jnp.float32))
+        tok_i = int(tok[0])
+        req.output.append(tok_i)
+        req.t_first_token = now
+        req.token_times.append(now)
+        req.state = State.DECODE
+        # install row
+        self.caches = self._insert(self.caches, row_caches, row)
+        prefix = self.cfg.num_vision_tokens or 0
+        self.pos[row] = len(req.prompt) + prefix
+        self.tokens = self.tokens.at[row, 0].set(tok_i)
+        self._temp[row] = req.sampling.temperature
+        self._topk[row] = req.sampling.top_k
+        self._topp[row] = req.sampling.top_p
+        self.row_req[row] = req
+
+    def _retire(self, row: int, now: float) -> None:
+        req = self.row_req.pop(row)
+        req.state = State.DONE
+        req.t_finish = now
+        req.row = None
+        self.pool.free(row)
+        self.finished.append(req)
+
+    def step(self, now: float | None = None) -> StepStats:
+        """One engine iteration: admit -> prefill(s) -> one decode step."""
+        now = time.perf_counter() if now is None else now
+        t_pre = 0.0
+        incoming = self.scheduler.next_batch(self.capacity - self.pool.used, now)
+        for req in incoming:
+            t0 = time.perf_counter()
+            self._admit(req, now)
+            t_pre += time.perf_counter() - t0
+
+        tokens_out = 0
+        t_dec = 0.0
+        if self.row_req:
+            t0 = time.perf_counter()
+            pos_dev = jnp.asarray(self.pos)
+            logits, self.caches = self._decode(
+                self.params, self.tokens, pos_dev, self.caches)
+            self.key, sk = jax.random.split(self.key)
+            sampled = self._sampler(logits.astype(jnp.float32), sk,
+                                    jnp.asarray(self._temp), jnp.asarray(self._topk),
+                                    jnp.asarray(self._topp))
+            sampled = np.asarray(jax.device_get(sampled))
+            t_dec = time.perf_counter() - t0
+            new_tokens = np.asarray(self.tokens).copy()
+            for row, req in list(self.row_req.items()):
+                t = int(sampled[row])
+                req.output.append(t)
+                req.token_times.append(now)
+                tokens_out += 1
+                self.pos[row] += 1
+                new_tokens[row, 0] = t
+                stop = req.sampling.stop_token
+                if (len(req.output) >= req.sampling.max_new_tokens
+                        or (stop is not None and t == stop)
+                        or self.pos[row] >= self.max_len - 1):
+                    self._retire(row, now)
+            self.tokens = jnp.asarray(new_tokens)
+
+        st = StepStats(t=now, decode_s=t_dec, prefill_s=t_pre,
+                       n_prefill=len(incoming), occupancy=self.pool.used,
+                       queue_depth=self.scheduler.depth(), tokens_out=tokens_out)
+        self.history.append(st)
+        return st
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while self.pending() and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+    # --------------------------------------------------------- migration
+    def extract_row(self, rid: int):
+        """Remove a mid-generation request, returning its migration payload
+        (request, row cache tree with batch dim 1, absolute pos, last token).
+        The row is freed (Llumnix-style pause-and-copy handoff)."""
+        rows = [r for r, q in self.row_req.items() if q.rid == rid]
+        assert rows, f"rid {rid} not active here"
+        row = rows[0]
+        req = self.row_req.pop(row)
+        leaves = jax.tree.leaves(self.caches)
+        sliced = []
+        for pool, ax in zip(leaves, self._batch_axes):
+            sliced.append(jax.lax.dynamic_slice_in_dim(pool, row, 1, axis=ax))
+        payload = {
+            "caches": jax.tree.unflatten(jax.tree.structure(self.caches), sliced),
+            "pos": int(self.pos[row]),
+            "last_token": int(np.asarray(self.tokens)[row, 0]),
+        }
+        req.state = State.MIGRATING
+        req.row = None
+        req.migrations += 1
+        self.pool.free(row)
+        return req, payload
+
+    def adopt(self, req: Request, payload: dict, now: float | None = None) -> bool:
+        """Install a migrated request (cache shapes must match: same cfg,
+        capacity-independent, same max_len)."""
+        now = time.perf_counter() if now is None else now
+        row = self.pool.allocate(req.rid)
+        if row is None:
+            return False
+        self.caches = self._insert(self.caches, payload["caches"], row)
+        self.pos[row] = payload["pos"]
+        self.tokens = self.tokens.at[row, 0].set(payload["last_token"])
+        self._temp[row] = req.sampling.temperature
+        self._topk[row] = req.sampling.top_k
+        self._topp[row] = req.sampling.top_p
+        self.row_req[row] = req
+        req.row, req.state = row, State.DECODE
+        return True
+
+    def kv_bytes(self, rid: int) -> int:
+        """Migration payload size (drives the handoff cost model)."""
+        leaves = jax.tree.leaves(self.caches)
+        total = 0
+        for pool, ax in zip(leaves, self._batch_axes):
+            total += pool.nbytes // pool.shape[ax]
+        return total

@@ -1,0 +1,155 @@
+"""KV-cache management for serving.
+
+Two allocators:
+
+* :class:`RowPool` — fixed-slot continuous-batching pool: each active request
+  owns one row of the (B, L, KV, hd) per-layer cache tree.  This is what the
+  CPU-engine decode path uses (static shapes, zero recompilation).
+
+* :class:`PagedAllocator` + :class:`PagedKVCache` — PagedAttention adapted to
+  TPU: KV lives in (num_blocks, block_size, KV, hd) pools indexed through
+  per-sequence block tables.  Block gathers become VMEM-tiled loops in the
+  Pallas kernel (kernels/paged_attention); here we keep the allocator and the
+  pure-jnp ops the kernel is validated against.  Allocator telemetry
+  (utilization / fragmentation) feeds the control-plane profiler.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------- rows
+class RowPool:
+    """Free-list of batch rows in a fixed decode batch."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._free = list(range(capacity - 1, -1, -1))
+        self.owner: dict[int, int] = {}          # row -> rid
+
+    def allocate(self, rid: int) -> int | None:
+        if not self._free:
+            return None
+        row = self._free.pop()
+        self.owner[row] = rid
+        return row
+
+    def free(self, row: int) -> None:
+        assert row in self.owner, f"double free of row {row}"
+        del self.owner[row]
+        self._free.append(row)
+
+    @property
+    def used(self) -> int:
+        return self.capacity - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used / max(self.capacity, 1)
+
+
+# -------------------------------------------------------------------- paged
+@dataclasses.dataclass
+class SeqAlloc:
+    blocks: list[int]
+    length: int
+
+
+class PagedAllocator:
+    """Host-side block allocator (the PagedAttention control structure)."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free = list(range(num_blocks - 1, -1, -1))
+        self.seqs: dict[int, SeqAlloc] = {}
+
+    def _need(self, length: int) -> int:
+        return -(-length // self.block_size)
+
+    def allocate(self, rid: int, length: int) -> list[int] | None:
+        n = self._need(max(length, 1))
+        if len(self._free) < n or rid in self.seqs:
+            return None
+        blocks = [self._free.pop() for _ in range(n)]
+        self.seqs[rid] = SeqAlloc(blocks, length)
+        return blocks
+
+    def extend(self, rid: int, new_length: int) -> list[int] | None:
+        """Grow a sequence; returns newly added blocks (may be empty), or
+        None if out of memory (caller should evict/migrate)."""
+        a = self.seqs[rid]
+        need = self._need(new_length) - len(a.blocks)
+        if need < 0:
+            need = 0
+        if len(self._free) < need:
+            return None
+        new = [self._free.pop() for _ in range(need)]
+        a.blocks.extend(new)
+        a.length = new_length
+        return new
+
+    def free(self, rid: int) -> None:
+        a = self.seqs.pop(rid)
+        self._free.extend(a.blocks)
+
+    # ---------------------------------------------------------- telemetry
+    def blocks_used(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def utilization(self) -> float:
+        """Fraction of the pool holding live blocks."""
+        return self.blocks_used() / max(self.num_blocks, 1)
+
+    def internal_fragmentation(self) -> float:
+        """Wasted tail-of-block slots / allocated slots."""
+        alloc = sum(len(a.blocks) for a in self.seqs.values()) * self.block_size
+        live = sum(a.length for a in self.seqs.values())
+        return 0.0 if alloc == 0 else 1.0 - live / alloc
+
+    def block_table(self, rid: int, max_blocks: int) -> np.ndarray:
+        t = np.full((max_blocks,), -1, np.int32)
+        b = self.seqs[rid].blocks[:max_blocks]
+        t[: len(b)] = b
+        return t
+
+
+class PagedKVCache:
+    """Device-side paged pools for one attention layer."""
+
+    def __init__(self, num_blocks: int, block_size: int, kv_heads: int,
+                 head_dim: int, dtype=jnp.bfloat16):
+        self.block_size = block_size
+        shape = (num_blocks, block_size, kv_heads, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+
+    def write(self, block_table, pos, k_new, v_new):
+        """Scatter one token per row.  block_table (B, max_blk) int32,
+        pos (B,) absolute positions, k/v_new (B, KV, hd)."""
+        self.k, self.v = paged_write(self.k, self.v, block_table, pos, k_new, v_new)
+        return self
+
+
+def paged_write(k_pool, v_pool, block_table, pos, k_new, v_new):
+    bs = k_pool.shape[1]
+    blk_idx = pos // bs
+    blk = jnp.take_along_axis(block_table, blk_idx[:, None], axis=1)[:, 0]
+    off = pos % bs
+    k_pool = k_pool.at[blk, off].set(k_new.astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, off].set(v_new.astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+def paged_gather(pool, block_table, max_len: int):
+    """(B, max_len, KV, hd) contiguous view gathered through block tables —
+    the pure-jnp oracle for the paged kernel."""
+    B, max_blk = block_table.shape
+    bs = pool.shape[1]
+    n_blk = max_len // bs
+    bt = jnp.maximum(block_table[:, :n_blk], 0)                # (B, n_blk)
+    gathered = pool[bt]                                        # (B, n_blk, bs, KV, hd)
+    return gathered.reshape(B, n_blk * bs, *pool.shape[2:])

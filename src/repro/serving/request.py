@@ -1,0 +1,76 @@
+"""Request lifecycle objects shared by the engine and the control plane."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any
+
+
+class State(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    MIGRATING = "migrating"
+    DONE = "done"
+    REJECTED = "rejected"
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    temperature: float = 0.0        # 0 => greedy
+    top_k: int = 0                  # 0 => off
+    top_p: float = 1.0
+    max_new_tokens: int = 16
+    stop_token: int | None = None
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]                       # token ids
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    arrival: float = 0.0                    # event-clock seconds
+    slo_ttft: float | None = None           # seconds; None = best effort
+    slo_tpot: float | None = None
+    extras: dict[str, Any] = dataclasses.field(default_factory=dict)  # vlm patches / frames
+
+    # --- lifecycle (engine-owned) ---
+    state: State = State.QUEUED
+    output: list[int] = dataclasses.field(default_factory=list)
+    t_admit: float | None = None
+    t_first_token: float | None = None
+    t_finish: float | None = None
+    token_times: list[float] = dataclasses.field(default_factory=list)
+    row: int | None = None                  # engine batch slot
+    replica: int | None = None              # control-plane placement
+    migrations: int = 0
+
+    # ------------------------------------------------------------ metrics
+    @property
+    def ttft(self) -> float | None:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival
+
+    @property
+    def tpot(self) -> float | None:
+        """Mean time-per-output-token after the first."""
+        if len(self.token_times) < 2:
+            return None
+        return (self.token_times[-1] - self.token_times[0]) / (len(self.token_times) - 1)
+
+    @property
+    def e2e(self) -> float | None:
+        if self.t_finish is None:
+            return None
+        return self.t_finish - self.arrival
+
+    def done(self) -> bool:
+        return self.state in (State.DONE, State.REJECTED)
+
+    def slo_met(self) -> bool:
+        if self.slo_ttft is not None and (self.ttft or 1e30) > self.slo_ttft:
+            return False
+        if self.slo_tpot is not None and (self.tpot or 0.0) > self.slo_tpot:
+            return False
+        return True

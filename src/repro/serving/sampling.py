@@ -1,0 +1,48 @@
+"""Batched token sampling: greedy / temperature / top-k / top-p.
+
+One jit-able function over (B, V) logits with per-row parameter vectors, so
+the engine never recompiles when request mixes change.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+NEG = -1e30
+
+
+def sample(logits, key, temperature, top_k, top_p):
+    """logits (B,V) f32; temperature/top_p (B,) f32; top_k (B,) int32.
+
+    temperature == 0 selects greedy for that row.  top_k == 0 disables top-k.
+    Returns (B,) int32 tokens.
+    """
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = logits / t
+
+    # top-k: mask everything below the k-th largest
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    k = jnp.clip(jnp.where(top_k <= 0, V, top_k), 1, V)
+    kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=1)
+    scaled = jnp.where(scaled >= kth, scaled, NEG)
+
+    # top-p (nucleus): keep the smallest prefix of sorted probs with mass >= p
+    probs_sorted = jax.nn.softmax(jnp.sort(scaled, axis=-1)[:, ::-1], axis=-1)
+    cum = jnp.cumsum(probs_sorted, axis=-1)
+    # number of tokens kept per row (always >= 1)
+    keep = jnp.sum(cum - probs_sorted < top_p[:, None], axis=-1)
+    keep = jnp.clip(keep, 1, V)
+    cutoff = jnp.take_along_axis(jnp.sort(scaled, axis=-1)[:, ::-1],
+                                 (keep - 1)[:, None], axis=1)
+    scaled = jnp.where(scaled >= cutoff, scaled, NEG)
+
+    sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)
+
+
+def make_sampler():
+    return jax.jit(sample)

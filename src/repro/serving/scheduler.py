@@ -1,0 +1,73 @@
+"""Admission control + queueing for continuous batching.
+
+Policies:
+* fcfs      — arrival order
+* sjf       — shortest predicted job first (prompt length proxy)
+* slo       — earliest-ttft-deadline first
+
+Admission per engine step follows Orca-style continuous batching: every
+iteration, free rows are refilled from the queue (up to ``max_prefill_per
+_step`` to bound prefill head-of-line blocking of running decodes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+from repro.serving.request import Request, State
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    policy: str = "fcfs"            # fcfs | sjf | slo
+    max_queue: int = 10_000
+    max_prefill_per_step: int = 1
+    admission_timeout: float | None = None   # reject if queued longer (s)
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
+        self.cfg = cfg
+        self.queue: deque[Request] = deque()
+        self.rejected = 0
+
+    def submit(self, req: Request, now: float) -> bool:
+        if len(self.queue) >= self.cfg.max_queue:
+            req.state = State.REJECTED
+            self.rejected += 1
+            return False
+        req.arrival = req.arrival or now
+        self.queue.append(req)
+        return True
+
+    def _key(self, r: Request, now: float):
+        if self.cfg.policy == "sjf":
+            return len(r.prompt)
+        if self.cfg.policy == "slo":
+            dl = r.arrival + (r.slo_ttft if r.slo_ttft is not None else 1e9)
+            return dl
+        return r.arrival
+
+    def next_batch(self, free_slots: int, now: float) -> list[Request]:
+        """Pop up to min(free_slots, max_prefill_per_step) requests."""
+        # expire
+        if self.cfg.admission_timeout is not None:
+            kept = deque()
+            for r in self.queue:
+                if now - r.arrival > self.cfg.admission_timeout:
+                    r.state = State.REJECTED
+                    self.rejected += 1
+                else:
+                    kept.append(r)
+            self.queue = kept
+        n = min(free_slots, self.cfg.max_prefill_per_step, len(self.queue))
+        if n <= 0:
+            return []
+        ordered = sorted(self.queue, key=lambda r: self._key(r, now))
+        picked = ordered[:n]
+        picked_set = {id(r) for r in picked}
+        self.queue = deque(r for r in self.queue if id(r) not in picked_set)
+        return picked
+
+    def depth(self) -> int:
+        return len(self.queue)

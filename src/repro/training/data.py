@@ -1,0 +1,61 @@
+"""Synthetic-but-learnable data pipeline.
+
+Tokens are drawn from a fixed random bigram chain (per seed), so models have
+real structure to learn (loss drops well below uniform) while the pipeline
+stays fully deterministic and resumable: batch i is a pure function of
+(seed, i) — restart-safe without data-state checkpoints beyond the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class DataConfig:
+    batch: int = 8
+    seq_len: int = 64
+    seed: int = 17
+    branching: int = 4          # candidate successors per token
+
+
+class BigramStream:
+    def __init__(self, cfg: ModelConfig, dcfg: DataConfig):
+        self.cfg = cfg
+        self.dcfg = dcfg
+        rng = np.random.default_rng(dcfg.seed)
+        V = cfg.vocab_size
+        # successor table (V, branching) + logits
+        self.succ = rng.integers(0, V, size=(V, dcfg.branching), dtype=np.int64)
+        self.probs = rng.dirichlet(np.ones(dcfg.branching), size=V).astype(np.float64)
+
+    def batch(self, step: int) -> dict:
+        d = self.dcfg
+        rng = np.random.default_rng((d.seed, step))
+        B, S, V = d.batch, d.seq_len, self.cfg.vocab_size
+        toks = np.empty((B, S), np.int64)
+        toks[:, 0] = rng.integers(0, V, B)
+        for t in range(1, S):
+            cur = toks[:, t - 1]
+            choice = np.array([rng.choice(d.branching, p=self.probs[c])
+                               for c in cur])
+            toks[:, t] = self.succ[cur, choice]
+        out = {"tokens": jnp.asarray(toks, jnp.int32),
+               "labels": jnp.asarray(toks, jnp.int32)}
+        if self.cfg.num_vision_tokens:
+            out["patches"] = jnp.asarray(
+                rng.normal(0, 0.02, (B, self.cfg.num_vision_tokens,
+                                     self.cfg.d_model)), jnp.float32)
+        if self.cfg.is_encoder_decoder:
+            out["frames"] = jnp.asarray(
+                rng.normal(0, 0.02, (B, self.cfg.encoder_seq, self.cfg.d_model)),
+                jnp.float32)
+        return out
+
+    def uniform_nll(self) -> float:
+        return float(np.log(self.cfg.vocab_size))

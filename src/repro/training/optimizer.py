@@ -1,0 +1,80 @@
+"""AdamW with fp32 moments (ZeRO-1: moments are sharded over the data axis by
+the distribution layer — see distributed/sharding.zero1_shardings)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as P
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def opt_state_specs(param_specs) -> dict:
+    """Moment specs mirror param specs at fp32."""
+
+    def mom(s: P.ParamSpec) -> P.ParamSpec:
+        return dataclasses.replace(s, dtype=f32, init="zeros")
+
+    return {
+        "mu": P.tree_map_specs(mom, param_specs),
+        "nu": P.tree_map_specs(mom, param_specs),
+        "step": P.ParamSpec((), (), dtype=jnp.int32, init="zeros"),
+    }
+
+
+def init_opt_state(param_specs):
+    return P.init(jax.random.PRNGKey(0), opt_state_specs(param_specs))
+
+
+def lr_at(cfg: AdamWConfig, step):
+    s = step.astype(f32) + 1.0
+    warm = s / max(cfg.warmup_steps, 1)
+    return cfg.lr * jnp.minimum(warm, 1.0)
+
+
+def apply_updates(params, grads, opt_state, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, stats)."""
+    step = opt_state["step"] + 1
+    lr = lr_at(cfg, opt_state["step"])
+
+    # global-norm clip
+    gsq = sum(jnp.sum(jnp.square(g.astype(f32))) for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) if cfg.grad_clip else 1.0
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(f32)
+    bc2 = 1.0 - b2 ** step.astype(f32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(f32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        u = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(f32)
+        return (p.astype(f32) - lr * u).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,105 @@
+"""jit-able step functions: train_step / prefill_step / decode_step.
+
+These are what the launcher lowers for the dry-run and what examples/tests
+execute on CPU with reduced configs.
+
+``make_train_step`` supports gradient accumulation (``perf.microbatch``):
+the global batch is reshaped to (n_micro, mb, ...) and scanned, accumulating
+grads in ``perf.accum_dtype``.  This is the standard memory lever for the
+large train cells (activation bytes scale with mb, not global batch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.perf import BASELINE, PerfConfig
+from repro.models import layers as L
+from repro.models.lm import make_model
+from repro.training.optimizer import AdamWConfig, apply_updates
+
+f32 = jnp.float32
+
+
+def _split_micro(batch: dict, n: int, shd):
+    """(B, ...) -> (n, B//n, ...) with batch kept on the data axis."""
+
+    def one(name, x):
+        mb = x.shape[0] // n
+        y = x.reshape(n, mb, *x.shape[1:])
+        names = (None, "batch") + ("act_seq",) * (y.ndim > 2) + (None,) * max(0, y.ndim - 3)
+        return shd(y, names[: y.ndim])
+
+    return {k: one(k, v) for k, v in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, perf: PerfConfig = BASELINE,
+                    opt_cfg: AdamWConfig = AdamWConfig(), shd=L._noop_shd):
+    model = make_model(cfg, perf)
+    adt = jnp.dtype(perf.accum_dtype)
+    from repro.models import params as P
+    spec_leaves = jax.tree.leaves(model.param_specs(), is_leaf=P.is_spec)
+
+    def loss_fn(p, batch):
+        loss, metrics = model.loss(p, batch, shd)
+        return loss, metrics
+
+    def grad_fn(p, batch):
+        out, grads = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+        # pin grads to the *param* layout: under dp/zero3 rules this turns
+        # the backward's full-size grad all-reduces into reduce-scatters
+        # into the ZeRO shards (halves grad wire bytes)
+        gl, tdef = jax.tree.flatten(grads)
+        gl = [shd(g, s.axes) for g, s in zip(gl, spec_leaves)]
+        return out, jax.tree.unflatten(tdef, gl)
+
+    def train_step(params, opt_state, batch):
+        if perf.microbatch > 1:
+            micro = _split_micro(batch, perf.microbatch, shd)
+
+            def body(acc, mb):
+                (loss, metrics), grads = grad_fn(params, mb)
+                grads = jax.tree.map(lambda a, g: a + g.astype(adt), acc[0], grads)
+                return (grads, acc[1] + loss, acc[2] + metrics["tokens"]), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            (gsum, lsum, tok), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), f32), jnp.zeros((), jnp.int32)), micro)
+            inv = 1.0 / perf.microbatch
+            grads = jax.tree.map(lambda g: (g.astype(f32) * inv).astype(g.dtype), gsum)
+            loss = lsum * inv
+            metrics = {"loss": loss, "tokens": tok}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+            metrics = dict(metrics, loss=loss)
+        params, opt_state, stats = apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, **stats)
+        return params, opt_state, metrics
+
+    return model, train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, perf: PerfConfig = BASELINE,
+                      shd=L._noop_shd):
+    model = make_model(cfg, perf)
+
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch, max_len, shd)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, caches
+
+    return model, prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, perf: PerfConfig = BASELINE, shd=L._noop_shd):
+    model = make_model(cfg, perf)
+
+    def decode_step(params, tokens, pos, caches):
+        logits, caches = model.decode_step(params, tokens, pos, caches, shd)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, caches
+
+    return model, decode_step

@@ -1,0 +1,75 @@
+"""Property tests for KV-cache write/mask semantics (layers.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import layers as L
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 6), st.integers(4, 32), st.integers(0, 2**31 - 1))
+def test_decode_write_is_scatter_equivalent(B, Lc, seed):
+    """The select-based write == a literal per-row scatter."""
+    rng = np.random.default_rng(seed)
+    KV, d = 2, 4
+    cache = {"k": jnp.asarray(rng.normal(size=(B, Lc, KV, d)), jnp.float32),
+             "v": jnp.asarray(rng.normal(size=(B, Lc, KV, d)), jnp.float32)}
+    k = jnp.asarray(rng.normal(size=(B, 1, KV, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, 1, KV, d)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, 3 * Lc, B), jnp.int32)
+    out = L.cache_write_decode(cache, k, v, pos, ring=False)
+    ref_k = np.asarray(cache["k"]).copy()
+    ref_v = np.asarray(cache["v"]).copy()
+    for b in range(B):
+        s = int(pos[b]) % Lc
+        ref_k[b, s] = np.asarray(k)[b, 0]
+        ref_v[b, s] = np.asarray(v)[b, 0]
+    np.testing.assert_array_equal(np.asarray(out["k"]), ref_k)
+    np.testing.assert_array_equal(np.asarray(out["v"]), ref_v)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 5), st.integers(4, 16), st.integers(1, 40),
+       st.integers(0, 2**31 - 1))
+def test_ring_prefill_keeps_last_window_of_valid_tokens(B, W, S, seed):
+    """Ring cache after a right-padded prefill exposes exactly the last
+    min(true_len, W) valid positions."""
+    rng = np.random.default_rng(seed)
+    KV, d = 1, 4
+    true_len = jnp.asarray(rng.integers(1, S + 1, B), jnp.int32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, d)), jnp.float32)
+    empty = {"k": jnp.zeros((B, W, KV, d)), "v": jnp.zeros((B, W, KV, d)),
+             "pos": jnp.full((B, W), -1, jnp.int32)}
+    out = L.cache_write_prefill(empty, k, v, ring=True, window=W,
+                                true_len=true_len)
+    pos = np.asarray(out["pos"])
+    for b in range(B):
+        t = int(true_len[b])
+        expect = set(range(max(0, t - W), t))
+        got = set(int(p) for p in pos[b] if p >= 0)
+        assert got == expect, (b, t, W, got, expect)
+        # stored k matches source rows at their canonical slots
+        for s_i, p in enumerate(pos[b]):
+            if p >= 0:
+                np.testing.assert_array_equal(
+                    np.asarray(out["k"])[b, s_i], np.asarray(k)[b, int(p)])
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 5), st.integers(4, 16), st.integers(0, 2**31 - 1))
+def test_cache_valid_mask_visibility(B, W, seed):
+    """Ring visibility: slot visible iff 0 <= pos_slot <= pos and within
+    the window."""
+    rng = np.random.default_rng(seed)
+    sp = jnp.asarray(rng.integers(-1, 60, (B, W)), jnp.int32)
+    pos = jnp.asarray(rng.integers(0, 60, B), jnp.int32)
+    m = L.cache_valid_mask({"k": jnp.zeros((B, W, 1, 1)), "pos": sp}, pos,
+                           ring=True, window=W)
+    ref = (np.asarray(sp) >= 0) & (np.asarray(sp) <= np.asarray(pos)[:, None]) \
+        & (np.asarray(sp) > np.asarray(pos)[:, None] - W)
+    np.testing.assert_array_equal(np.asarray(m), ref)

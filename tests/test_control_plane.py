@@ -1,0 +1,152 @@
+"""Unit tests for the paper's six control-plane modules."""
+import math
+
+import pytest
+
+from repro.core.autoscaler import Autoscaler, HPAConfig
+from repro.core.loadbalancer import LoadBalancer
+from repro.core.migration import MigrationConfig, MigrationManager
+from repro.core.predictor import EWMA, HoltWinters, WindowedAR
+from repro.core.profiler import Profiler, SeriesWindow
+
+
+# ------------------------------------------------------------ autoscaler
+def test_hpa_control_law_exact():
+    """desired = ceil(current * metric / target) — the K8s formula."""
+    a = Autoscaler(HPAConfig(metric="util", target=0.5, max_replicas=100,
+                             tolerance=0.0, stabilization_s=0.0,
+                             scale_down_cooldown_s=0.0))
+    assert a.evaluate(0.0, 2, 1.0) == math.ceil(2 * 1.0 / 0.5)
+    assert a.evaluate(1.0, 4, 0.25) == 2
+    assert a.evaluate(2.0, 3, 0.5) == 3      # ratio 1 => no change
+
+
+def test_hpa_tolerance_band():
+    a = Autoscaler(HPAConfig(target=1.0, tolerance=0.1))
+    assert a.evaluate(0.0, 4, 1.05) == 4     # within +-10%
+    assert a.evaluate(1.0, 4, 1.3) > 4
+
+
+def test_hpa_min_max_clamp():
+    a = Autoscaler(HPAConfig(target=1.0, min_replicas=2, max_replicas=5,
+                             tolerance=0.0))
+    assert a.evaluate(0.0, 3, 100.0) == 5
+    a2 = Autoscaler(HPAConfig(target=1.0, min_replicas=2, max_replicas=5,
+                              tolerance=0.0, stabilization_s=0.0,
+                              scale_down_cooldown_s=0.0))
+    assert a2.evaluate(0.0, 3, 0.01) == 2
+
+
+def test_hpa_scale_down_stabilization():
+    cfg = HPAConfig(target=1.0, tolerance=0.0, stabilization_s=30.0,
+                    scale_down_cooldown_s=0.0, max_replicas=10)
+    a = Autoscaler(cfg)
+    assert a.evaluate(0.0, 4, 2.0) == 8          # scale up immediately
+    # low metric right after: stabilization window still remembers desired=8
+    assert a.evaluate(1.0, 8, 0.1) == 8
+    # 31s later the high sample left the window -> scale down allowed
+    assert a.evaluate(32.0, 8, 0.1) < 8
+
+
+def test_hpa_proactive_uses_forecast():
+    pred = HoltWinters(dt=1.0)
+    a = Autoscaler(HPAConfig(target=1.0, tolerance=0.0, proactive=True,
+                             horizon_s=5.0, max_replicas=64), predictor=pred)
+    n = 1
+    for t in range(10):                      # rising load 1,2,...,10
+        n = a.evaluate(float(t), n, float(t + 1))
+    # forecast(5s ahead) > last observation => scaled beyond reactive value
+    assert n >= 10
+
+
+# ------------------------------------------------------------ predictor
+def test_predictors_track_trend():
+    for p in (EWMA(0.5), HoltWinters(), WindowedAR(order=2, window=32)):
+        for t in range(50):
+            p.observe(float(t), 2.0 * t)
+        f = p.forecast(1.0)
+        assert f > 60.0, type(p).__name__
+
+
+def test_ar_flat_series():
+    p = WindowedAR(order=3, window=16)
+    for t in range(20):
+        p.observe(float(t), 5.0)
+    assert abs(p.forecast() - 5.0) < 0.5
+
+
+# ------------------------------------------------------------ balancer
+class _R:
+    def __init__(self, load):
+        self._l = load
+
+
+def test_lb_least_outstanding():
+    lb = LoadBalancer("least")
+    rs = [_R(5), _R(1), _R(3)]
+    assert lb.pick(rs, load=lambda r: r._l) is rs[1]
+
+
+def test_lb_round_robin_cycles():
+    lb = LoadBalancer("rr")
+    rs = [_R(0), _R(0), _R(0)]
+    picks = [lb.pick(rs, load=lambda r: 0) for _ in range(6)]
+    assert len(set(map(id, picks))) == 3
+
+
+def test_lb_p2c_prefers_lower_load():
+    lb = LoadBalancer("p2c", seed=1)
+    rs = [_R(100), _R(0)]
+    wins = sum(lb.pick(rs, load=lambda r: r._l) is rs[1] for _ in range(50))
+    assert wins == 50                        # of any sampled pair, lower wins
+
+
+# ------------------------------------------------------------ profiler
+def test_profiler_window_and_percentiles():
+    w = SeriesWindow(window_s=10.0)
+    for i in range(100):
+        w.observe(float(i) * 0.1, float(i))
+    vals = w.values(now=9.9)
+    assert min(vals) >= 0.0 and w.percentile(50, now=9.9) > 0
+
+
+def test_profiler_bottleneck_ranking():
+    p = Profiler()
+    p.observe_latency("layer/27", 1.0, 10.0)
+    p.observe_latency("layer/30", 1.0, 0.05)
+    p.observe_latency("layer/1", 1.0, 0.06)
+    top = p.bottlenecks("layer/")
+    assert top[0][0] == "layer/27"
+    assert p.hotspot_ratio("layer/") == pytest.approx(200.0)
+
+
+def test_profiler_right_skew_detection():
+    p = Profiler()
+    for i in range(50):
+        p.observe_latency("x", 1.0, 0.1)
+    for _ in range(3):
+        p.observe_latency("x", 1.0, 5.0)     # heavy right tail
+    assert p.right_skewed("x", now=1.0)
+
+
+# ------------------------------------------------------------ migration
+def test_migration_plan_balances():
+    m = MigrationManager(MigrationConfig(imbalance_threshold=0.3))
+    moves = m.plan([0.9, 0.1, 0.5])
+    assert moves and moves[0] == (0, 1)
+
+
+def test_migration_plan_noop_when_balanced():
+    m = MigrationManager(MigrationConfig(imbalance_threshold=0.3))
+    assert m.plan([0.5, 0.45, 0.55]) == []
+
+
+def test_migration_drains_straggler():
+    m = MigrationManager(MigrationConfig(straggler_speed=0.6))
+    moves = m.plan([0.2, 0.3], speeds=[0.5, 1.0])
+    assert moves and moves[0][0] == 0
+
+
+def test_transfer_time_cost_model():
+    m = MigrationManager(MigrationConfig(bandwidth_Bps=1e9, overhead_s=0.01))
+    assert m.transfer_time(1e9) == pytest.approx(1.01)

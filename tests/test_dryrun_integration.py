@@ -1,0 +1,40 @@
+"""Dry-run integration: one real lower+compile per mesh via subprocess
+(the 512-device XLA flag must not leak into this test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_one_cell_compiles(mesh, tmp_path):
+    out = tmp_path / "rec.jsonl"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-0.5b",
+         "--shape", "decode_32k", "--mesh", mesh, "--out", str(out)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=540)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["status"] == "ok"
+    assert rec["fits_hbm"]
+    assert rec["flops_per_device"] > 0
+    assert rec["bytes_per_device"] > 0
+    assert rec["memory"]["peak_bytes"] > 0
+
+
+def test_documented_skip_is_reported(tmp_path):
+    out = tmp_path / "rec.jsonl"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-0.5b",
+         "--shape", "long_500k", "--mesh", "single", "--out", str(out)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=240)
+    assert r.returncode == 0
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["status"] == "skip"
+    assert "full-attention" in rec["reason"]

@@ -1,0 +1,316 @@
+"""Integration tests: continuous-batching engine, migration, microservice
+pipeline, orchestrator — real JAX models on CPU."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import params as P
+from repro.models.lm import make_model
+from repro.serving import InferenceEngine, Request, SamplingParams
+from repro.serving.scheduler import SchedulerConfig
+
+ARCH = "qwen2-0.5b-smoke"
+
+
+def _mk_engine(**kw):
+    cfg = get_config(ARCH)
+    kw.setdefault("capacity", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("buckets", (8, 16))
+    return cfg, InferenceEngine(cfg, **kw)
+
+
+def _reqs(cfg, n, rng, max_new=5, lo=4, hi=14):
+    out = []
+    for i in range(n):
+        out.append(Request(
+            rid=i,
+            prompt=[int(x) for x in rng.integers(0, cfg.vocab_size,
+                                                 int(rng.integers(lo, hi)))],
+            sampling=SamplingParams(max_new_tokens=max_new)))
+    return out
+
+
+def test_engine_serves_all_requests(rng):
+    cfg, eng = _mk_engine()
+    for r in _reqs(cfg, 6, rng):
+        eng.submit(r)
+    done = eng.run(max_steps=300)
+    assert len(done) == 6
+    for r in done:
+        assert len(r.output) == 5
+        assert r.ttft is not None and r.e2e is not None
+
+
+def test_engine_greedy_matches_direct_decode(rng):
+    """Engine output (greedy, bucketed prefill) == straight-line decode."""
+    cfg, eng = _mk_engine()
+    prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 11)]
+    req = Request(rid=0, prompt=prompt,
+                  sampling=SamplingParams(max_new_tokens=6, temperature=0.0))
+    eng.submit(req)
+    done = eng.run(max_steps=60)
+    got = done[0].output
+
+    model = make_model(cfg)
+    toks = jnp.asarray([prompt], jnp.int32)
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, 64))(
+        eng.params, {"tokens": toks})
+    exp = [int(jnp.argmax(logits, -1)[0])]
+    pos = jnp.asarray([len(prompt)], jnp.int32)
+    cur = jnp.asarray([[exp[-1]]], jnp.int32)
+    for _ in range(5):
+        logits, cache = jax.jit(model.decode_step)(eng.params, cur, pos, cache)
+        exp.append(int(jnp.argmax(logits, -1)[0]))
+        cur = jnp.asarray([[exp[-1]]], jnp.int32)
+        pos = pos + 1
+    assert got == exp, (got, exp)
+
+
+def test_engine_bucketed_prefill_exactness(rng):
+    """Same prompt served via different bucket sizes gives identical greedy
+    output (right-padding correctness: ring caches, logits gather)."""
+    cfg = get_config("gemma3-27b-smoke")   # has ring (local) layers
+    prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 9)]
+    outs = []
+    for buckets in [(16,), (32,)]:
+        eng = InferenceEngine(cfg, capacity=2, max_len=64, buckets=buckets, seed=5)
+        eng.submit(Request(rid=0, prompt=prompt,
+                           sampling=SamplingParams(max_new_tokens=5)))
+        done = eng.run(max_steps=40)
+        outs.append(done[0].output)
+    assert outs[0] == outs[1], outs
+
+
+def test_engine_ssm_bucketed_prefill(rng):
+    """SSM state must be exact under right-padded prefill."""
+    cfg = get_config("mamba2-780m-smoke")
+    prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 10)]
+    outs = []
+    for buckets in [(16,), (32,)]:
+        eng = InferenceEngine(cfg, capacity=2, max_len=64, buckets=buckets, seed=5)
+        eng.submit(Request(rid=0, prompt=prompt,
+                           sampling=SamplingParams(max_new_tokens=5)))
+        outs.append(eng.run(max_steps=40)[0].output)
+    assert outs[0] == outs[1], outs
+
+
+def test_migration_preserves_generation(rng):
+    """Llumnix-style handoff: migrating mid-generation must not change the
+    greedy continuation."""
+    from repro.core.migration import MigrationManager
+    cfg, eng_a = _mk_engine(seed=3)
+    _, eng_b = _mk_engine(seed=3)
+    eng_b.params = eng_a.params            # same replica weights
+
+    prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 9)]
+    # reference: run fully on A
+    ref_eng = _mk_engine(seed=3)[1]
+    ref_eng.params = eng_a.params
+    ref_eng.submit(Request(rid=0, prompt=list(prompt),
+                           sampling=SamplingParams(max_new_tokens=8)))
+    ref = ref_eng.run(max_steps=60)[0].output
+
+    req = Request(rid=0, prompt=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=8))
+    eng_a.submit(req)
+    for _ in range(4):                     # prefill + a few decode steps
+        eng_a.step()
+    assert req.state.name == "DECODE" and len(req.output) >= 2
+    mgr = MigrationManager()
+    ev = mgr.migrate(eng_a, eng_b, rid=0, now=0.0)
+    assert ev is not None and ev.bytes > 0
+    done = eng_b.run(max_steps=60)
+    assert done[0].output == ref
+    assert done[0].migrations == 1
+
+
+def test_staged_pipeline_matches_monolithic(rng):
+    """Microservice decomposition: stage-partitioned decode == monolithic."""
+    from repro.core.microservice import StagePipeline
+    cfg = get_config(ARCH)
+    model = make_model(cfg)
+    params = P.init(jax.random.PRNGKey(0), model.param_specs())
+    B, S, MAX = 2, 16, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size).astype(jnp.int32)
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, MAX))(
+        params, {"tokens": toks})
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    pos = jnp.full((B,), S, jnp.int32)
+    ref_logits, _ = jax.jit(model.decode_step)(params, nxt, pos, cache)
+
+    for num_stages in (2, 4):
+        pipe = StagePipeline(model, params, num_stages=num_stages)
+        got_logits, _ = pipe.decode_step(nxt, pos, cache)
+        np.testing.assert_allclose(np.asarray(got_logits, np.float32),
+                                   np.asarray(ref_logits, np.float32),
+                                   atol=1e-3)
+        # profiler saw every stage
+        for s in range(pipe.staged.num_stages):
+            assert pipe.profiler.latency[f"stage/{s}"].count() == 1
+
+
+def test_staged_pipeline_split_replicas(rng):
+    from repro.core.microservice import StagePipeline
+    cfg = get_config(ARCH)
+    model = make_model(cfg)
+    params = P.init(jax.random.PRNGKey(0), model.param_specs())
+    B, S, MAX = 4, 16, 32
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                              cfg.vocab_size).astype(jnp.int32)
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, MAX))(
+        params, {"tokens": toks})
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    pos = jnp.full((B,), S, jnp.int32)
+    ref_logits, _ = jax.jit(model.decode_step)(params, nxt, pos, cache)
+
+    pipe = StagePipeline(model, params, num_stages=2)
+    pipe.scale_stage(0, 2, now=0.0)        # bottleneck stage gets 2 replicas
+    got, _ = pipe.decode_step(nxt, pos, cache)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref_logits, np.float32), atol=1e-3)
+
+
+def test_orchestrator_scales_and_serves(rng):
+    from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+    from repro.core.autoscaler import HPAConfig
+    cfg = get_config(ARCH)
+
+    def make_engine():
+        return InferenceEngine(cfg, capacity=2, max_len=48, buckets=(8, 16),
+                               seed=11,
+                               sched=SchedulerConfig(max_prefill_per_step=1))
+
+    orch = Orchestrator(make_engine, OrchestratorConfig(
+        min_replicas=1, hpa=HPAConfig(metric="queue", target=2.0,
+                                      max_replicas=3, tolerance=0.0,
+                                      stabilization_s=0.0,
+                                      scale_down_cooldown_s=1e9),
+        control_every_steps=2))
+    reqs = _reqs(cfg, 10, rng, max_new=4)
+    for r in reqs:
+        orch.submit(r)
+    done = orch.run(max_steps=400)
+    assert len(done) == 10
+    assert len(orch.engines) > 1, "queue pressure should have scaled up"
+    assert all(len(r.output) == 4 for r in done)
+
+
+def test_engine_serves_encoder_decoder(rng):
+    """whisper-style enc-dec through the engine (frames via extras)."""
+    import numpy as np
+    cfg = get_config("whisper-small-smoke")
+    eng = InferenceEngine(cfg, capacity=2, max_len=48, buckets=(8, 16), seed=9)
+    frames = np.asarray(rng.normal(0, 0.02, (1, cfg.encoder_seq, cfg.d_model)),
+                        np.float32)
+    for i in range(3):
+        eng.submit(Request(
+            rid=i, prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, 6)],
+            sampling=SamplingParams(max_new_tokens=4),
+            extras={"frames": frames}))
+    done = eng.run(max_steps=120)
+    assert len(done) == 3 and all(len(r.output) == 4 for r in done)
+
+
+def test_engine_serves_vlm(rng):
+    import numpy as np
+    cfg = get_config("paligemma-3b-smoke")
+    eng = InferenceEngine(cfg, capacity=2, max_len=48, buckets=(8,), seed=9)
+    patches = np.asarray(rng.normal(0, 0.02, (1, cfg.num_vision_tokens,
+                                              cfg.d_model)), np.float32)
+    eng.submit(Request(rid=0,
+                       prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, 7)],
+                       sampling=SamplingParams(max_new_tokens=4),
+                       extras={"patches": patches}))
+    done = eng.run(max_steps=60)
+    assert len(done) == 1 and len(done[0].output) == 4
+
+
+def test_disaggregated_prefill_decode(rng):
+    """DistServe-style PD disaggregation: outputs match monolithic serving
+    and decode engines never execute a prefill."""
+    from repro.core.disaggregation import DisaggConfig, DisaggregatedServer
+    cfg = get_config(ARCH)
+
+    def mk():
+        return InferenceEngine(cfg, capacity=4, max_len=64, buckets=(8, 16),
+                               seed=21)
+
+    # monolithic reference
+    ref_eng = mk()
+    prompts = [[int(x) for x in rng.integers(0, cfg.vocab_size, 9)]
+               for _ in range(4)]
+    for i, p in enumerate(prompts):
+        ref_eng.submit(Request(rid=i, prompt=list(p),
+                               sampling=SamplingParams(max_new_tokens=6)))
+    ref = {r.rid: r.output for r in ref_eng.run(max_steps=100)}
+
+    srv = DisaggregatedServer(mk, DisaggConfig(prefill_engines=1,
+                                               decode_engines=2))
+    srv.prefill_pool[0].params = ref_eng.params
+    for e in srv.decode_pool:
+        e.params = ref_eng.params
+    for i, p in enumerate(prompts):
+        srv.submit(Request(rid=i, prompt=list(p),
+                           sampling=SamplingParams(max_new_tokens=6)))
+    done = srv.run(max_steps=200)
+    assert len(done) == 4
+    assert {r.rid: r.output for r in done} == ref
+    # decode engines never compiled a prefill program
+    for de in srv.decode_pool:
+        assert not de._prefill, "decode engine ran a prefill"
+    assert all(r.migrations == 1 for r in done)
+
+
+@pytest.mark.parametrize("arch", ["jamba-v0.1-52b-smoke", "mixtral-8x7b-smoke",
+                                  "gemma-2b-smoke", "qwen3-moe-30b-a3b-smoke"])
+def test_engine_serves_all_families(arch, rng):
+    """Hybrid / MoE / MQA families through the continuous-batching engine."""
+    cfg = get_config(arch)
+    eng = InferenceEngine(cfg, capacity=2, max_len=64, buckets=(16,), seed=13)
+    for i in range(3):
+        eng.submit(Request(
+            rid=i, prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, 8)],
+            sampling=SamplingParams(max_new_tokens=4)))
+    done = eng.run(max_steps=150)
+    assert len(done) == 3 and all(len(r.output) == 4 for r in done)
+
+
+def test_stage_profiler_drives_hpa(rng):
+    """Glue check for the paper's full loop on the real stage pipeline:
+    profiler ranks stage latencies -> HPA law computes the replica count for
+    the measured bottleneck stage -> the pipeline scales that stage."""
+    from repro.core.autoscaler import Autoscaler, HPAConfig
+    from repro.core.microservice import StagePipeline
+    cfg = get_config(ARCH)
+    model = make_model(cfg)
+    params = P.init(jax.random.PRNGKey(0), model.param_specs())
+    B, S, MAX = 2, 16, 32
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                              cfg.vocab_size).astype(jnp.int32)
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, MAX))(
+        params, {"tokens": toks})
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    pos = jnp.full((B,), S, jnp.int32)
+
+    pipe = StagePipeline(model, params, num_stages=2)
+    for i in range(3):                       # profile a few decode steps
+        logits, cache = pipe.decode_step(nxt, pos, cache, now=float(i))
+    ranked = pipe.profiler.bottlenecks("stage/")
+    assert len(ranked) == 2 and ranked[0][1] >= ranked[1][1]
+    hot = int(ranked[0][0].split("/")[1])
+
+    hpa = Autoscaler(HPAConfig(metric="latency", target=ranked[0][1] / 2,
+                               tolerance=0.0, max_replicas=4))
+    new = hpa.evaluate(3.0, 1, ranked[0][1])
+    assert new >= 2
+    pipe.scale_stage(hot, new, now=3.0)
+    assert len(pipe.replicas[hot]) == new
+    # pipeline still numerically consistent after scaling
+    logits2, _ = pipe.decode_step(nxt, pos, cache, now=4.0)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))

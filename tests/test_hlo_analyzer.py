@@ -1,0 +1,79 @@
+"""Unit tests for the static HLO analyzer (launch/hlo.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo as H
+
+
+def _module_for(fn, *args):
+    return H.HloModule(jax.jit(fn).lower(*args).compile().as_text())
+
+
+def test_dot_flops_exact():
+    a = jnp.zeros((64, 128), jnp.float32)
+    b = jnp.zeros((128, 32), jnp.float32)
+    mod = _module_for(lambda a, b: a @ b, a, b)
+    assert mod.flops() == pytest.approx(2 * 64 * 128 * 32)
+
+
+def test_while_trip_multiplier():
+    a = jnp.zeros((32, 32), jnp.float32)
+
+    def loop(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    mod = _module_for(loop, a)
+    # 7 iterations x (2 * 32^3)
+    assert mod.flops() == pytest.approx(7 * 2 * 32**3, rel=0.01)
+
+
+def test_bytes_in_place_dus():
+    buf = jnp.zeros((128, 1024), jnp.float32)
+    upd = jnp.ones((1, 1024), jnp.float32)
+
+    def f(buf, upd, i):
+        return jax.lax.dynamic_update_slice(buf, upd, (i, 0))
+
+    # donated => aliased in-place update, no defensive copy
+    comp = jax.jit(f, donate_argnums=(0,)).lower(
+        buf, upd, jnp.asarray(3)).compile()
+    mod = H.HloModule(comp.as_text())
+    # in-place: ~2x the update slice, NOT the 512 KiB buffer
+    assert mod.bytes_accessed() < 10 * upd.nbytes
+
+
+def test_collective_wire_factors():
+    txt = """HloModule test, entry_computation_layout={()->f32[]}
+
+ENTRY %main () -> f32[] {
+  %p = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%p), replica_groups=[16,16]<=[256]T(1,0), to_apply=%add
+  %ag = f32[4096]{0} all-gather(%ar), replica_groups=[16,16]<=[256]T(1,0), dimensions={0}
+  ROOT %r = f32[] constant(0)
+}
+"""
+    mod = H.HloModule(txt)
+    c = mod.collectives()
+    assert c["all-reduce"] == pytest.approx(2 * 4096 * 15 / 16)
+    assert c["all-gather"] == pytest.approx(4096 * 4 * 15 / 16)
+
+
+def test_parse_tuple_shapes_and_params():
+    line = "  %w = (s32[], bf16[4,8]{1,0}) while(%t), condition=%c, body=%b"
+    op = H._parse_op(line)
+    assert op.op == "while"
+    assert op.operands == ["t"]
+    assert H._shape_bytes(op.out_tokens) == 4 + 4 * 8 * 2
+
+
+def test_memory_per_device_fields():
+    f = jax.jit(lambda x: x * 2.0)
+    comp = f.lower(jax.ShapeDtypeStruct((256,), jnp.float32)).compile()
+    mem = H.memory_per_device(comp)
+    assert mem["peak_bytes"] >= 0
+    assert mem["argument_bytes"] == 1024

@@ -1,0 +1,59 @@
+"""Scheduler policy + admission tests."""
+from repro.serving.request import Request, SamplingParams
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+def _r(rid, prompt_len, arrival, slo_ttft=None):
+    return Request(rid=rid, prompt=list(range(prompt_len)), arrival=arrival,
+                   slo_ttft=slo_ttft)
+
+
+def test_fcfs_order():
+    s = Scheduler(SchedulerConfig(policy="fcfs", max_prefill_per_step=3))
+    for i, t in enumerate([3.0, 1.0, 2.0]):
+        s.submit(_r(i, 4, t), now=t)
+    picked = s.next_batch(3, now=5.0)
+    assert [r.rid for r in picked] == [1, 2, 0]
+
+
+def test_sjf_prefers_short_prompts():
+    s = Scheduler(SchedulerConfig(policy="sjf", max_prefill_per_step=2))
+    s.submit(_r(0, 100, 0.0), 0.0)
+    s.submit(_r(1, 5, 1.0), 1.0)
+    s.submit(_r(2, 50, 2.0), 2.0)
+    picked = s.next_batch(2, now=3.0)
+    assert [r.rid for r in picked] == [1, 2]
+
+
+def test_slo_deadline_order():
+    s = Scheduler(SchedulerConfig(policy="slo", max_prefill_per_step=2))
+    s.submit(_r(0, 4, 0.0, slo_ttft=100.0), 0.0)
+    s.submit(_r(1, 4, 1.0, slo_ttft=2.0), 1.0)
+    picked = s.next_batch(1, now=1.5)
+    assert picked[0].rid == 1
+
+
+def test_admission_timeout_rejects():
+    s = Scheduler(SchedulerConfig(admission_timeout=5.0))
+    s.submit(_r(0, 4, 0.0), 0.0)
+    s.submit(_r(1, 4, 8.0), 8.0)
+    picked = s.next_batch(2, now=10.0)
+    assert [r.rid for r in picked] == [1]
+    assert s.rejected == 1
+
+
+def test_queue_capacity_rejects():
+    s = Scheduler(SchedulerConfig(max_queue=2))
+    assert s.submit(_r(0, 4, 0.0), 0.0)
+    assert s.submit(_r(1, 4, 0.0), 0.0)
+    assert not s.submit(_r(2, 4, 0.0), 0.0)
+    assert s.rejected == 1
+
+
+def test_respects_free_slots_and_step_cap():
+    s = Scheduler(SchedulerConfig(max_prefill_per_step=2))
+    for i in range(5):
+        s.submit(_r(i, 4, float(i)), float(i))
+    assert len(s.next_batch(1, now=9.0)) == 1     # slots bound
+    assert len(s.next_batch(4, now=9.0)) == 2     # per-step cap binds
+    assert s.depth() == 2

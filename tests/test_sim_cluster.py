@@ -1,0 +1,112 @@
+"""Simulator behaviour + paper-figure validation (deliverables c, d)."""
+import pytest
+
+from repro.core.autoscaler import HPAConfig
+from repro.core.cluster import (ClusterConfig, LayerCost, SimCluster, SimJob,
+                                closed_loop, llama2_13b_a100_costs,
+                                poisson_open_loop)
+
+
+def _uniform_costs(n=4, alpha=0.1, beta=0.0):
+    return [LayerCost(alpha=alpha, beta=beta) for _ in range(n)]
+
+
+def test_pipeline_latency_additive():
+    """One job through N uniform stages: E2E == N * alpha exactly."""
+    cl = SimCluster(ClusterConfig(num_layers=4, seed=0), _uniform_costs(4, 0.1))
+    cl.submit(SimJob(0, batch=1, tokens=100, t_submit=0.0))
+    cl.run(until=10.0)
+    assert cl.done and cl.done[0].e2e == pytest.approx(0.4, abs=1e-6)
+
+
+def test_queueing_under_concurrency():
+    """Two simultaneous jobs on one replica: second waits at each stage."""
+    cl = SimCluster(ClusterConfig(num_layers=1, seed=0), _uniform_costs(1, 1.0))
+    cl.submit(SimJob(0, 1, 100, 0.0))
+    cl.submit(SimJob(1, 1, 100, 0.0))
+    cl.run(until=30.0)
+    e2es = sorted(j.e2e for j in cl.done)
+    assert e2es[0] == pytest.approx(1.0, abs=1e-6)
+    assert e2es[1] == pytest.approx(2.0, abs=1e-6)
+
+
+def test_batch_split_speedup():
+    """With 2 ready replicas and batch_split, the beta term halves."""
+    costs = [LayerCost(alpha=0.1, beta=0.01, split_overhead=0.0)]
+    cl = SimCluster(ClusterConfig(num_layers=1, cold_start_s=0.0, seed=0), costs)
+    cl.services[0].scale_to(0.0, 2)
+    cl.submit(SimJob(0, batch=100, tokens=10, t_submit=1.0))
+    cl.run(until=20.0)
+    # split: alpha + beta*ceil(100/2) = 0.1 + 0.5 (vs 1.1 unsplit)
+    assert cl.done[0].e2e == pytest.approx(0.6, abs=1e-6)
+
+
+def test_cold_start_delays_replica():
+    costs = [LayerCost(alpha=1.0, beta=0.0)]
+    cl = SimCluster(ClusterConfig(num_layers=1, cold_start_s=5.0, seed=0), costs)
+    cl.services[0].scale_to(0.0, 2)         # replica 1 ready at t=5
+    assert len(cl.services[0].ready(1.0)) == 1
+    assert len(cl.services[0].ready(6.0)) == 2
+
+
+def test_failure_injection_reroutes():
+    costs = [LayerCost(alpha=0.5, beta=0.0)]
+    cl = SimCluster(ClusterConfig(num_layers=1, cold_start_s=0.0, seed=0), costs)
+    cl.services[0].scale_to(0.0, 2)
+    cl.inject_failure(0.1, 0, 0)
+    cl.submit(SimJob(0, 1, 10, t_submit=1.0))
+    cl.run(until=10.0)
+    assert cl.done and cl.done[0].e2e == pytest.approx(0.5, abs=1e-6)
+
+
+def test_straggler_slows_then_autoscaler_helps():
+    costs = [LayerCost(alpha=1.0, beta=0.0)]
+    cl = SimCluster(ClusterConfig(num_layers=1, cold_start_s=0.0, seed=0), costs)
+    cl.inject_straggler(0.0, 0, 0, speed=0.25)
+    cl.submit(SimJob(0, 1, 10, t_submit=1.0))
+    cl.run(until=20.0)
+    assert cl.done[0].e2e == pytest.approx(4.0, abs=1e-6)   # 1.0 / 0.25
+
+
+def test_open_loop_poisson_completes():
+    cl = SimCluster(ClusterConfig(num_layers=2, seed=0), _uniform_costs(2, 0.01))
+    poisson_open_loop(cl, rate_jobs_s=5.0, batch=4, duration_s=30.0, seed=1)
+    assert len(cl.done) > 50
+    assert cl.qps() > 0
+
+
+# ------------------------------------------------------- paper validation
+def test_fig4_reproduces_paper_numbers():
+    """Batch 62: 15.23s -> 12.28s, 4.07 -> 5.05 QPS (within 5%)."""
+    from benchmarks.fig4_autoscaling import run_one
+    wo = run_one(62, False, duration_s=600.0)
+    w = run_one(62, True, duration_s=600.0)
+    assert wo["e2e_s"] == pytest.approx(15.23, rel=0.05)
+    assert w["e2e_s"] == pytest.approx(12.28, rel=0.05)
+    assert wo["qps"] == pytest.approx(4.07, rel=0.05)
+    assert w["qps"] == pytest.approx(5.05, rel=0.05)
+    assert w["replicas27"] > 1
+
+
+def test_fig3_hotspot_exceeds_230x():
+    from benchmarks.fig3_bottleneck import run
+    res = run(duration_s=1200.0, verbose=False)
+    assert res["ratio"] > 230.0
+    assert res["skew27"] > 0.5               # right-skewed, as in the paper
+
+
+def test_autoscaling_never_hurts_throughput():
+    from benchmarks.fig4_autoscaling import run_one
+    for b in (16, 48):
+        wo = run_one(b, False, duration_s=400.0)
+        w = run_one(b, True, duration_s=400.0)
+        assert w["qps"] >= wo["qps"] * 0.98
+
+
+def test_proactive_scaling_leads_reactive():
+    """Paper §3 load prediction: a Holt-Winters-driven HPA fires ~horizon
+    earlier than the reactive controller on a rising load ramp."""
+    from benchmarks.burst_proactive import ramp_trigger_times
+    r = ramp_trigger_times(horizon_s=60.0)
+    assert r["proactive"] is not None and r["reactive"] is not None
+    assert r["lead_s"] >= 30.0
