@@ -30,21 +30,26 @@ from repro.core.profiler import Profiler
 # ----------------------------------------------------------------- cost model
 @dataclasses.dataclass
 class LayerCost:
-    """Per-layer service time:  t(b, R) = alpha + beta * ceil(b/R) + gamma*(R-1).
+    """Per-layer service time:
+    t(b, n, R) = alpha + beta * ceil(b/R) + beta_tok * n + gamma*(R-1).
 
     ``alpha`` absorbs fixed per-call cost (kernel launch, gRPC hop, and for
     throttled hotspots the contention/thermal penalty the paper observed);
-    ``beta`` is the batch-proportional compute/memory term; ``gamma`` is the
-    scatter/gather overhead of splitting one batch across R replicas.
+    ``beta`` is the batch-proportional compute/memory term; ``beta_tok`` is
+    the prefill-token-proportional term (the engine's prefill-tokens-per-step
+    telemetry is its real-backend counterpart; 0 keeps the paper-calibrated
+    defaults); ``gamma`` is the scatter/gather overhead of splitting one
+    batch across R replicas.
     """
     alpha: float
     beta: float
     jitter_sigma: float = 0.0       # lognormal sigma applied under load
     split_overhead: float = 0.478   # gamma
+    beta_tok: float = 0.0           # per prompt-token (prefill-bound layers)
 
     def service_s(self, batch: int, split: int, rng: random.Random,
-                  loaded: bool) -> float:
-        t = (self.alpha + self.beta * batch
+                  loaded: bool, tokens: int = 0) -> float:
+        t = (self.alpha + self.beta * batch + self.beta_tok * tokens
              + self.split_overhead * (max(split, 1) - 1))
         if self.jitter_sigma > 0 and loaded:
             t *= rng.lognormvariate(0.0, self.jitter_sigma)
@@ -100,7 +105,7 @@ class Service:
     """One microservice (a contiguous layer range) with N replicas."""
 
     def __init__(self, name: str, layers: tuple[int, int],
-                 cost: Callable[[int, int, random.Random, bool], float],
+                 cost: Callable[..., float],
                  lb: LoadBalancer, autoscaler: Autoscaler | None,
                  cold_start_s: float, rng: random.Random):
         self.name = name
@@ -218,7 +223,8 @@ class SimCluster:
             finish = []
             for r in ready:
                 loaded = r.outstanding > 0
-                svc_t = svc.cost(per, shards, self.rng, loaded) / r.speed
+                svc_t = svc.cost(per, shards, self.rng, loaded,
+                                 tokens=job.tokens) / r.speed
                 start = max(self.now, r.busy_until)
                 r.busy_until = start + svc_t
                 r.outstanding += 1
@@ -229,7 +235,8 @@ class SimCluster:
             r = svc.lb.pick(ready, load=lambda x: x.load(self.now),
                             weight=lambda x: x.speed)
             loaded = r.outstanding > 0
-            svc_t = svc.cost(job.batch, 1, self.rng, loaded) / r.speed
+            svc_t = svc.cost(job.batch, 1, self.rng, loaded,
+                             tokens=job.tokens) / r.speed
             start = max(self.now, r.busy_until)
             r.busy_until = start + svc_t
             r.outstanding += 1
@@ -244,6 +251,7 @@ class SimCluster:
         lat = self.now - t_start
         job.stage_latency[svc.name] = lat
         self.profiler.observe_latency(svc.name, self.now, lat)
+        self.profiler.observe_tokens(svc.name, self.now, job.tokens)
         if si + 1 < len(self.services):
             self._push(self.now, "stage", (jid, si + 1))
         else:

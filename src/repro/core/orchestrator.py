@@ -128,6 +128,11 @@ class Orchestrator:
                 continue
             st = eng.step(now)
             self.profiler.observe_latency(f"engine/{i}/decode", now, st.decode_s)
+            if st.prefill_tokens:
+                self.profiler.observe_latency(f"engine/{i}/prefill", now,
+                                              st.prefill_s)
+                self.profiler.observe_tokens(f"engine/{i}/prefill", now,
+                                             st.prefill_tokens)
         self._steps += 1
         if self._steps % self.cfg.control_every_steps == 0:
             self._control(now)

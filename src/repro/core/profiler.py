@@ -57,6 +57,9 @@ class SeriesWindow:
     def count(self, now: float | None = None) -> int:
         return len(self.values(now))
 
+    def sum(self, now: float | None = None) -> float:
+        return sum(self.values(now))
+
     def rate(self, now: float) -> float:
         """Samples per second over the window."""
         return self.count(now) / self.window_s
@@ -83,6 +86,8 @@ class Profiler:
             lambda: SeriesWindow(window_s))
         self.util: dict[str, SeriesWindow] = defaultdict(
             lambda: SeriesWindow(window_s))
+        self.tokens: dict[str, SeriesWindow] = defaultdict(
+            lambda: SeriesWindow(window_s))
         self.alltime_max: dict[str, float] = defaultdict(float)
         self.alltime_count: dict[str, int] = defaultdict(int)
 
@@ -95,12 +100,22 @@ class Profiler:
     def observe_util(self, target: str, t: float, frac: float) -> None:
         self.util[target].observe(t, frac)
 
+    def observe_tokens(self, target: str, t: float, n: float) -> None:
+        """Token-throughput counter (engine prefill/decode tokens per step;
+        the autoscaler's 'work arriving' signal alongside queue depth)."""
+        self.tokens[target].observe(t, float(n))
+
     # ------------------------------------------------------------- queries
     def p(self, target: str, pct: float, now: float | None = None) -> float:
         return self.latency[target].percentile(pct, now)
 
     def mean_util(self, target: str, now: float | None = None) -> float:
         return self.util[target].mean(now)
+
+    def token_rate(self, target: str, now: float | None = None) -> float:
+        """Tokens per second over the sliding window."""
+        w = self.tokens[target]
+        return w.sum(now) / w.window_s
 
     def bottlenecks(self, prefix: str = "", now: float | None = None,
                     metric: str = "max") -> list[tuple[str, float]]:

@@ -275,6 +275,73 @@ def cache_write_prefill(cache, k, v, *, ring: bool, window: int, true_len=None):
     return {"k": ck, "v": cv, "pos": cpos}
 
 
+def cache_write_chunk(cache, k, v, pos0, n_valid, *, ring: bool):
+    """Append a chunk of C tokens at per-row absolute positions
+    pos0 .. pos0+n_valid-1 into a slot cache (slot = pos % L).
+
+    k/v: (B,C,KV,hd) right-padded chunk projections; pos0/n_valid (B,) int32.
+    Rows with n_valid == 0 are untouched (batched chunked prefill runs the
+    whole pool through one program; idle rows must be exact no-ops).  When
+    the chunk is longer than a ring cache the *latest* token that maps to
+    each slot wins, matching sequential decode-write semantics.
+
+    Like cache_write_decode this is a gather + select, not a scatter (XLA:CPU
+    expands bf16 scatters through a full-buffer f32 promote/demote).
+    """
+    B, C = k.shape[:2]
+    L = cache["k"].shape[1]
+    end1 = pos0 + n_valid - 1                            # (B,) last valid pos
+    s = jnp.arange(L, dtype=jnp.int32)[None, :]          # (1,L) slot index
+    p = end1[:, None] - ((end1[:, None] - s) % L)        # latest pos ≡ s (mod L)
+    valid = (p >= pos0[:, None]) & (n_valid[:, None] > 0)
+    j = jnp.clip(p - pos0[:, None], 0, C - 1)            # (B,L) chunk index
+    gk = jnp.take_along_axis(k, j[:, :, None, None], axis=1)
+    gv = jnp.take_along_axis(v, j[:, :, None, None], axis=1)
+    m = valid[:, :, None, None]
+    ck = jnp.where(m, gk.astype(cache["k"].dtype), cache["k"])
+    cv = jnp.where(m, gv.astype(cache["v"].dtype), cache["v"])
+    out = {"k": ck, "v": cv}
+    if ring:
+        out["pos"] = jnp.where(valid, p, cache["pos"])
+    return out
+
+
+def attention_chunk(q, k, v, cache, pos0, *, window: int, ring: bool,
+                    scale: float | None = None):
+    """Chunked-prefill attention: queries at positions pos0+i attend the
+    cache as written by *previous* chunks (positions < pos0) plus this
+    chunk's own k/v causally.
+
+    q: (B,C,H,d); k/v: (B,C,KV,d) this chunk's projections (pre-write);
+    cache: the cache *before* this chunk's write.  Sourcing the current
+    chunk from k/v rather than the written cache keeps windowed (ring)
+    layers exact even when the chunk is longer than the ring (where the
+    write would overwrite slots early queries still need).
+    """
+    B, C, H, d = q.shape
+    L = cache["k"].shape[1]
+    qpos = pos0[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]   # (B,C)
+    if ring:
+        sp = cache["pos"]                                            # (B,L)
+        mc = (sp >= 0) & (sp < pos0[:, None])
+    else:
+        sp = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None, :], (B, L))
+        mc = sp < pos0[:, None]
+    mc = mc[:, None, :] & (sp[:, None, :] <= qpos[:, :, None])       # (B,C,L)
+    if window:
+        mc &= sp[:, None, :] > qpos[:, :, None] - window
+    i = jnp.arange(C, dtype=jnp.int32)
+    mx = i[None, :] <= i[:, None]                                    # (C,C) causal
+    if window:
+        mx &= i[None, :] > i[:, None] - window
+    mask = jnp.concatenate(
+        [mc, jnp.broadcast_to(mx[None], (B, C, C))], axis=2)         # (B,C,L+C)
+    kk = jnp.concatenate([cache["k"].astype(q.dtype), k.astype(q.dtype)], axis=1)
+    vv = jnp.concatenate([cache["v"].astype(q.dtype), v.astype(q.dtype)], axis=1)
+    scale = scale if scale is not None else d ** -0.5
+    return _mha_chunk(q, kk, vv, mask, scale)
+
+
 def cache_write_decode(cache, k, v, pos, *, ring: bool):
     """Write one token at per-row position ``pos`` (B,) int32.
 

@@ -109,6 +109,9 @@ class LM:
         if kind == "ssm":
             if mode == "decode":
                 mix, new_cache = M.ssd_apply_decode(p["mixer"], h, cache, cfg, shd)
+            elif mode == "chunk":
+                mix, new_cache = M.ssd_apply_chunk(p["mixer"], h, cache, cfg, shd,
+                                                   true_len=true_len)
             else:
                 mix, new_cache = M.ssd_apply_full(
                     p["mixer"], h, cfg, shd, want_state=(mode == "prefill"),
@@ -124,6 +127,13 @@ class LM:
                 mask = L.cache_valid_mask(new_cache, pos, ring=window > 0, window=window)
                 ctx = L.attention_decode(q, new_cache["k"].astype(q.dtype),
                                          new_cache["v"].astype(q.dtype), mask)
+            elif mode == "chunk":
+                # attend the pre-write cache + this chunk's own k/v, then
+                # append the chunk (pos = chunk start, true_len = valid count)
+                ctx = L.attention_chunk(q, k, v, cache, pos,
+                                        window=window, ring=window > 0)
+                new_cache = L.cache_write_chunk(cache, k, v, pos, true_len,
+                                                ring=window > 0)
             else:
                 if perf.use_pallas and prefix_len == 0:
                     from repro.kernels.flash_attention.ops import attention as FA
@@ -171,7 +181,7 @@ class LM:
         def group_body(carry, xs):
             x, aux = carry
             gparams = xs[0]
-            gcache = xs[1] if mode == "decode" else None
+            gcache = xs[1] if mode in ("decode", "chunk") else None
             new_entries = {}
             for j in range(self.period):
                 c = gcache[f"m{j}"] if gcache is not None else None
@@ -211,14 +221,14 @@ class LM:
             group_caches = jax.tree.map(lambda *xs_: jnp.stack(xs_), *new_groups)
         else:
             xs = (params["blocks"],)
-            if mode == "decode":
+            if mode in ("decode", "chunk"):
                 xs = (params["blocks"], caches["blocks"])
             (x, aux), group_caches = jax.lax.scan(body, (x, jnp.zeros((), f32)), xs)
 
         tail_caches = {}
         for i in self.tail_layers:
             tp = params["tail"][f"t{i}"]
-            c = caches["tail"][f"t{i}"] if mode == "decode" else None
+            c = caches["tail"][f"t{i}"] if mode in ("decode", "chunk") else None
             x, nc, a = self._block(
                 tp, x, cfg.layer_kind(i), cfg.layer_is_moe(i),
                 mode=mode, positions=positions, cache=c, pos=pos,
@@ -293,6 +303,40 @@ class LM:
         else:
             li = (abs_len - 1)[:, None, None]
             x_last = jnp.take_along_axis(x, jnp.maximum(li, 0), axis=1)
+        logits = L.unembed_logits(params["embed"], x_last, cfg)[:, 0]
+        return logits, caches
+
+    def prefill_chunk(self, params, tokens, pos0, n_valid, caches, shd=L._noop_shd):
+        """One bucket-sized chunk of a long prompt, batched over cache rows.
+
+        tokens (B,C) int32 right-padded chunk; pos0 (B,) int32 absolute start
+        positions; n_valid (B,) int32 valid tokens per row — 0 marks an idle
+        row whose cache is returned bit-identical (the engine runs its whole
+        decode pool through one program regardless of how many rows are mid-
+        prefill).  ``caches`` is the full pool cache tree; the chunk's K/V
+        (or SSM state) is appended in place of raising on long prompts.
+
+        Returns (logits (B,V) f32 at each row's last valid chunk position,
+        new caches).  Text-only decoders — no vision prefix or encoder; the
+        engine gates admission accordingly.
+
+        Exactness: attention / ring / SSM chunked prefill matches full-seq
+        prefill (fp rounding aside).  MoE capacity dispatch is per-call, so
+        its token-drop pattern under router skew may differ from a single
+        full-sequence prefill — inherent to capacity-based MoE (decode, with
+        one slot per expert per token, never drops either way).
+        """
+        cfg = self.cfg
+        x = L.embed_apply(params["embed"], tokens, cfg)
+        x = shd(x, ("batch", "act_seq", "embed"))
+        C = tokens.shape[1]
+        positions = pos0[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        x, caches, _ = self._trunk(params, x, mode="chunk", positions=positions,
+                                   caches=caches, pos=pos0, prefix_len=0,
+                                   max_len=0, shd=shd, true_len=n_valid)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        li = jnp.maximum(n_valid - 1, 0)[:, None, None]
+        x_last = jnp.take_along_axis(x, li, axis=1)
         logits = L.unembed_logits(params["embed"], x_last, cfg)[:, 0]
         return logits, caches
 

@@ -91,40 +91,15 @@ def _expand_heads(t, H):
     return jnp.repeat(t, rep, axis=-2) if rep > 1 else t
 
 
-def ssd_apply_full(p, x, cfg: ModelConfig, shd=_noop_shd, *, want_state: bool = False,
-                   true_len=None, use_pallas: bool = False, interpret: bool = True):
-    """Full-sequence SSD.  x: (B,S,D) -> (y, cache|None).
+def _ssd_scan_chunks(xc, Bc, Cc, da, dt, h0, H: int, Q: int):
+    """Chunked SSD scan over conv-activated projections.
 
-    Non-divisible S is front-padded with zeros to a chunk multiple: leading
-    zero tokens are exact no-ops for the causal conv (matches zero left-pad)
-    and contribute nothing to the state (x=0 after silu(conv(0))=0), so both
-    the sliced outputs and the final state are unchanged.
-
-    ``true_len`` (B,) int32 supports right-padded prompts: pad positions get
-    dt=0 and x=0, making them exact no-ops for the state recurrence; the conv
-    tail cache is gathered at per-row valid positions.
+    xc: (B,S,H,P), Bc/Cc: (B,S,G,N), da/dt: (B,S,H), h0: (B,H,P,N) initial
+    state (zeros for a fresh sequence).  S must be a multiple of Q.
+    Returns (h_last, y (B,S,H,P) f32).
     """
-    B, S_in, D = x.shape
-    Q = min(cfg.ssm_chunk, S_in)
-    lead = (-S_in) % Q
-    if lead:
-        x = jnp.pad(x, ((0, 0), (lead, 0), (0, 0)))
-    B, S, D = x.shape
-    H, P, G, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+    B, S = xc.shape[:2]
     nc = S // Q
-
-    z, xr, Br, Cr, dt = _project(p, x, cfg)
-    xc = jax.nn.silu(_causal_conv(xr, p["conv_x"]))
-    Bc = jax.nn.silu(_causal_conv(Br, p["conv_B"]))
-    Cc = jax.nn.silu(_causal_conv(Cr, p["conv_C"]))
-    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B,S,H) f32
-    if true_len is not None:
-        seq_idx = jnp.arange(S, dtype=jnp.int32)[None, :] - lead  # (1,S)
-        valid = seq_idx < true_len[:, None]                       # (B,S)
-        dt = jnp.where(valid[..., None], dt, 0.0)
-        xc = jnp.where(valid[..., None, None], xc, 0.0)
-    a = -jnp.exp(p["A_log"].astype(f32))     # (H,)
-    da = dt * a                              # (B,S,H) <= 0
 
     def chunkify(t):  # (B,S,...) -> (nc,B,Q,...)
         return t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
@@ -154,6 +129,44 @@ def ssd_apply_full(p, x, cfg: ModelConfig, shd=_noop_shd, *, want_state: bool = 
             xdt.astype(xk.dtype), preferred_element_type=f32)
         return h_new, (y_in + y_off)
 
+    h_last, ys = jax.lax.scan(body, h0, (xq, Bq, Cq, daq, dtq))
+    return h_last, ys.swapaxes(0, 1).reshape(B, S, *ys.shape[3:])
+
+
+def ssd_apply_full(p, x, cfg: ModelConfig, shd=_noop_shd, *, want_state: bool = False,
+                   true_len=None, use_pallas: bool = False, interpret: bool = True):
+    """Full-sequence SSD.  x: (B,S,D) -> (y, cache|None).
+
+    Non-divisible S is front-padded with zeros to a chunk multiple: leading
+    zero tokens are exact no-ops for the causal conv (matches zero left-pad)
+    and contribute nothing to the state (x=0 after silu(conv(0))=0), so both
+    the sliced outputs and the final state are unchanged.
+
+    ``true_len`` (B,) int32 supports right-padded prompts: pad positions get
+    dt=0 and x=0, making them exact no-ops for the state recurrence; the conv
+    tail cache is gathered at per-row valid positions.
+    """
+    B, S_in, D = x.shape
+    Q = min(cfg.ssm_chunk, S_in)
+    lead = (-S_in) % Q
+    if lead:
+        x = jnp.pad(x, ((0, 0), (lead, 0), (0, 0)))
+    B, S, D = x.shape
+    H, P, G, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+
+    z, xr, Br, Cr, dt = _project(p, x, cfg)
+    xc = jax.nn.silu(_causal_conv(xr, p["conv_x"]))
+    Bc = jax.nn.silu(_causal_conv(Br, p["conv_B"]))
+    Cc = jax.nn.silu(_causal_conv(Cr, p["conv_C"]))
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B,S,H) f32
+    if true_len is not None:
+        seq_idx = jnp.arange(S, dtype=jnp.int32)[None, :] - lead  # (1,S)
+        valid = seq_idx < true_len[:, None]                       # (B,S)
+        dt = jnp.where(valid[..., None], dt, 0.0)
+        xc = jnp.where(valid[..., None, None], xc, 0.0)
+    a = -jnp.exp(p["A_log"].astype(f32))     # (H,)
+    da = dt * a                              # (B,S,H) <= 0
+
     if use_pallas:
         from repro.kernels.ssd_scan.ops import ssd_chunked_scan
         Bh = _expand_heads(Bc, H)
@@ -162,8 +175,7 @@ def ssd_apply_full(p, x, cfg: ModelConfig, shd=_noop_shd, *, want_state: bool = 
                                      use_pallas=True, interpret=interpret)
     else:
         h0 = jnp.zeros((B, H, P, N), f32)
-        h_last, ys = jax.lax.scan(body, h0, (xq, Bq, Cq, daq, dtq))
-        y = ys.swapaxes(0, 1).reshape(B, S, H, P)
+        h_last, y = _ssd_scan_chunks(xc, Bc, Cc, da, dt, h0, H, Q)
     y = y + p["D_skip"][:, None] * xc.astype(f32)
     y = _gated_norm(p["norm"], y, z, cfg.norm_eps)
     y = shd(y.astype(x.dtype), ("batch", "act_seq", "heads", "qkv"))
@@ -192,6 +204,71 @@ def ssd_apply_full(p, x, cfg: ModelConfig, shd=_noop_shd, *, want_state: bool = 
         "conv_C": tail(Cr).astype(x.dtype),
     }
     return out, cache
+
+
+def ssd_apply_chunk(p, x, cache, cfg: ModelConfig, shd=_noop_shd, *, true_len):
+    """One chunked-prefill step with carried state.
+
+    x: (B,C,D) right-padded chunk of a longer prompt; ``cache`` holds the SSM
+    state after the previous chunks (zeros for the first chunk); ``true_len``
+    (B,) int32 counts the valid tokens of this chunk (0 == row is a no-op:
+    its returned cache row equals the input row).  Matches ssd_apply_full on
+    the concatenated sequence: pad positions get dt=0 / x=0 (exact state
+    no-ops) and the causal conv reads the cached last K-1 raw projections
+    instead of zero left-padding.  Returns (y (B,C,D), new cache).
+    """
+    B, C, D = x.shape
+    H, P, G, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+    K = cfg.ssm_conv
+    z, xr, Br, Cr, dt = _project(p, x, cfg)
+    # conv over [cached raw tail (K-1) | chunk]; outputs at concat positions
+    # >= K-1 see the true history, so slicing [K-1:] is exact for the chunk
+    xcat = jnp.concatenate([cache["conv_x"].astype(xr.dtype), xr], axis=1)
+    Bcat = jnp.concatenate([cache["conv_B"].astype(Br.dtype), Br], axis=1)
+    Ccat = jnp.concatenate([cache["conv_C"].astype(Cr.dtype), Cr], axis=1)
+    xc = jax.nn.silu(_causal_conv(xcat, p["conv_x"])[:, K - 1:])
+    Bc = jax.nn.silu(_causal_conv(Bcat, p["conv_B"])[:, K - 1:])
+    Cc = jax.nn.silu(_causal_conv(Ccat, p["conv_C"])[:, K - 1:])
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B,C,H) f32
+    valid = jnp.arange(C, dtype=jnp.int32)[None, :] < true_len[:, None]
+    dt = jnp.where(valid[..., None], dt, 0.0)
+    xc = jnp.where(valid[..., None, None], xc, 0.0)
+    a = -jnp.exp(p["A_log"].astype(f32))
+    da = dt * a
+
+    Q = min(cfg.ssm_chunk, C)
+    lead = (-C) % Q
+    if lead:  # zero front-pad to a chunk multiple: dt=0/x=0 state no-ops
+        pad = lambda t: jnp.pad(t, ((0, 0), (lead, 0)) + ((0, 0),) * (t.ndim - 2))
+        xc_p, Bc_p, Cc_p, da_p, dt_p, z_p = map(pad, (xc, Bc, Cc, da, dt, z))
+    else:
+        xc_p, Bc_p, Cc_p, da_p, dt_p, z_p = xc, Bc, Cc, da, dt, z
+    h_last, y = _ssd_scan_chunks(xc_p, Bc_p, Cc_p, da_p, dt_p,
+                                 cache["h"].astype(f32), H, Q)
+    y = y + p["D_skip"][:, None] * xc_p.astype(f32)
+    y = _gated_norm(p["norm"], y, z_p, cfg.norm_eps)
+    y = shd(y.astype(x.dtype), ("batch", "act_seq", "heads", "qkv"))
+    out = jnp.einsum("bshp,hpd->bsd", y, p["w_out"])
+    if lead:
+        out = out[:, lead:]
+
+    # new conv tail: last K-1 raw projections ending at the last valid token.
+    # xcat index of the last valid token is (K-1) + true_len - 1, so the tail
+    # is xcat[true_len : true_len + K-1]; true_len == 0 reproduces the old
+    # cached tail exactly (the no-op row guarantee).
+    idx = true_len[:, None] + jnp.arange(K - 1, dtype=jnp.int32)[None, :]
+
+    def tail(t):
+        ix = idx.reshape(B, K - 1, *([1] * (t.ndim - 2)))
+        return jnp.take_along_axis(t, ix, axis=1)
+
+    new_cache = {
+        "h": h_last,
+        "conv_x": tail(xcat).astype(cache["conv_x"].dtype),
+        "conv_B": tail(Bcat).astype(cache["conv_B"].dtype),
+        "conv_C": tail(Ccat).astype(cache["conv_C"].dtype),
+    }
+    return out, new_cache
 
 
 def ssd_apply_decode(p, x, cache, cfg: ModelConfig, shd=_noop_shd):

@@ -5,6 +5,18 @@ throughout: a fixed decode batch of ``capacity`` rows over a ``RowPool``,
 prefill bucketed to a few lengths, per-row sampling parameter vectors — so
 the engine never recompiles as the request mix changes.
 
+Prefill is a pipeline, not a one-request-at-a-time call:
+
+* requests admitted in the same step are grouped by bucket and prefilled as
+  one batched program per bucket (group size padded to a fixed power of two
+  so each bucket compiles exactly once);
+* prompts longer than the largest bucket are **chunked**: bucket-sized
+  slices append into the row's KV/SSM cache across steps instead of raising,
+  so a long prompt is a supported scenario and per-step prefill work stays
+  bounded (``SchedulerConfig.prefill_token_budget``) to limit head-of-line
+  blocking of running decodes.  One chunk program covers the whole pool —
+  idle rows ride along as exact no-ops.
+
 The control plane (core/) consumes the per-step telemetry this engine
 emits; the same engine class serves as the *real* backend behind the
 cluster simulator's cost model.
@@ -12,6 +24,7 @@ cluster simulator's cost model.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Callable
 
@@ -45,6 +58,8 @@ class StepStats:
     occupancy: int
     queue_depth: int
     tokens_out: int
+    prefill_tokens: int = 0     # prompt tokens prefilled this step (all paths)
+    chunk_rows: int = 0         # rows advanced by the chunked-prefill program
 
 
 class InferenceEngine:
@@ -60,17 +75,30 @@ class InferenceEngine:
         self.capacity = capacity
         self.max_len = max_len
         self.buckets = tuple(sorted(buckets))
+        self.chunk = self.buckets[-1]       # chunked-prefill slice length
+        # chunked prefill appends at absolute text positions — it covers pure
+        # decoders; vision-prefix and encoder-decoder requests stay bucketed
+        self._can_chunk = not (cfg.is_encoder_decoder or cfg.num_vision_tokens)
         if params is None:
             params = P.init(jax.random.PRNGKey(seed), self.model.param_specs())
         self.params = params
         self.scheduler = Scheduler(sched)
         self.pool = RowPool(capacity)
         self.key = jax.random.PRNGKey(seed + 1)
+        # fixed batched-prefill group size (pow2) => one compile per bucket
+        g = max(1, min(capacity, sched.max_prefill_per_step))
+        self._group = 1 << (g - 1).bit_length()
 
         # device state ------------------------------------------------------
         cache_specs = self.model.cache_specs(capacity, max_len)
-        self._batch_axes = [s.axes.index("batch")
-                            for s in jax.tree.leaves(cache_specs, is_leaf=P.is_spec)]
+        spec_leaves = jax.tree.leaves(cache_specs, is_leaf=P.is_spec)
+        self._batch_axes = [s.axes.index("batch") for s in spec_leaves]
+        # per-leaf reset fill (ring slot-position caches hold -1 when empty)
+        self._reset_vals = [s.scale if s.init == "const" else 0.0
+                            for s in spec_leaves]
+        # per-leaf KV sequence axis length (None: per-row state, e.g. SSM)
+        self._seq_lens = [s.shape[s.axes.index("act_kv")]
+                          if "act_kv" in s.axes else None for s in spec_leaves]
         self.caches = P.init(jax.random.PRNGKey(0), cache_specs)
         self.tokens = jnp.zeros((capacity, 1), jnp.int32)
         self.pos = np.zeros((capacity,), np.int32)
@@ -80,86 +108,237 @@ class InferenceEngine:
         self._temp = np.zeros((capacity,), np.float32)
         self._topk = np.zeros((capacity,), np.int32)
         self._topp = np.ones((capacity,), np.float32)
+        # chunked-prefill rows: admission order preserved by dict insertion
+        self._prefilling: dict[int, Request] = {}
+        self._consumed: dict[int, int] = {}
+        self._fresh: set[int] = set()
+        self.rejected_long = 0
 
         # jitted programs -----------------------------------------------------
         self._sampler = make_sampler()
         self._decode = jax.jit(
             lambda p, t, pos, c: self.model.decode_step(p, t, pos, c),
             donate_argnums=(3,))
-        self._prefill = {}  # bucket -> jit
-        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._decode_live = jax.jit(self._decode_live_impl, donate_argnums=(3,))
+        self._prefill = {}  # (bucket, group) -> jit
+        self._insert = jax.jit(self._insert_rows_impl, donate_argnums=(0,))
+        self._chunk_fn = None  # lazily-built chunked-prefill program
         self.history: list[StepStats] = []
         self.finished: list[Request] = []
 
     # ------------------------------------------------------------- internals
-    def _insert_impl(self, pool_tree, new_tree, row):
+    def _insert_rows_impl(self, pool_tree, new_tree, rows):
+        """Scatter a batched prefill's rows into the pool along each leaf's
+        batch axis.  Pad entries carry row == capacity and are dropped."""
         pl = jax.tree.leaves(pool_tree)
         nl = jax.tree.leaves(new_tree)
         out = []
         for pool, new, ax in zip(pl, nl, self._batch_axes):
-            starts = [0] * pool.ndim
-            starts[ax] = row
-            out.append(jax.lax.dynamic_update_slice(
-                pool, new.astype(pool.dtype), tuple(starts)))
+            idx = (slice(None),) * ax + (rows,)
+            out.append(pool.at[idx].set(new.astype(pool.dtype), mode="drop"))
         return jax.tree.unflatten(jax.tree.structure(pool_tree), out)
 
-    def _prefill_fn(self, bucket: int):
-        if bucket not in self._prefill:
+    def _select_rows(self, mask, true_leaves, caches):
+        """Per-leaf select along each leaf's batch axis: mask rows take the
+        corresponding ``true_leaves`` entry (array leaf or scalar fill)."""
+        out = []
+        for t, o, ax in zip(true_leaves, jax.tree.leaves(caches),
+                            self._batch_axes):
+            shape = [1] * o.ndim
+            shape[ax] = o.shape[ax]
+            t = t if hasattr(t, "ndim") else jnp.asarray(t, o.dtype)
+            out.append(jnp.where(mask.reshape(shape), t, o))
+        return jax.tree.unflatten(jax.tree.structure(caches), out)
+
+    def _decode_live_impl(self, params, tokens, pos, caches, live):
+        """Decode step that leaves live=False rows bit-unchanged.  Rows mid
+        chunked-prefill must not take decode-step cache writes (the SSM state
+        update in particular is destructive)."""
+        logits, new = self.model.decode_step(params, tokens, pos, caches)
+        return logits, self._select_rows(live, jax.tree.leaves(new), caches)
+
+    def _chunk_impl(self, params, caches, tokens, pos0, n_valid, fresh):
+        """One chunk for every selected pool row (n_valid==0 rows no-op).
+        fresh rows are reset first — a reused row must not leak the previous
+        occupant's ring positions or SSM state into a new prompt."""
+        caches = self._select_rows(fresh, self._reset_vals, caches)
+        return self.model.prefill_chunk(params, tokens, pos0, n_valid, caches)
+
+    def _prefill_fn(self, bucket: int, group: int):
+        key = (bucket, group)
+        if key not in self._prefill:
             def fn(p, batch, true_len):
                 logits, caches = self.model.prefill(p, batch, self.max_len,
                                                     true_len=true_len)
                 return logits, caches
-            self._prefill[bucket] = jax.jit(fn)
-        return self._prefill[bucket]
+            self._prefill[key] = jax.jit(fn)
+        return self._prefill[key]
+
+    def _chunk_program(self):
+        if self._chunk_fn is None:
+            self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1,))
+        return self._chunk_fn
 
     # ------------------------------------------------------------- interface
     def submit(self, req: Request, now: float | None = None) -> bool:
         now = time.perf_counter() if now is None else now
+        prefix = self.cfg.num_vision_tokens or 0
+        limit = self.max_len - 1 - prefix
+        if not self._can_chunk:
+            limit = min(limit, self.buckets[-1])
+        if len(req.prompt) > limit:
+            # served-or-rejected, never a crash: a prompt that cannot fit a
+            # cache row (or cannot be chunked on this family) bounces here
+            req.state = State.REJECTED
+            self.rejected_long += 1
+            return False
         return self.scheduler.submit(req, now)
 
     def pending(self) -> int:
         return self.scheduler.depth() + self.pool.used
 
-    def _admit(self, req: Request, now: float) -> None:
-        row = self.pool.allocate(req.rid)
-        assert row is not None
-        req.row, req.state, req.t_admit = row, State.PREFILL, now
-        bucket = _round_bucket(len(req.prompt), self.buckets)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, : len(req.prompt)] = req.prompt
-        batch = {"tokens": jnp.asarray(toks)}
-        if self.cfg.num_vision_tokens:
-            batch["patches"] = jnp.asarray(
-                req.extras.get("patches",
-                               np.zeros((1, self.cfg.num_vision_tokens, self.cfg.d_model),
-                                        np.float32)))
-        if self.cfg.is_encoder_decoder:
-            batch["frames"] = jnp.asarray(
-                req.extras.get("frames",
-                               np.zeros((1, self.cfg.encoder_seq, self.cfg.d_model),
-                                        np.float32)))
-        true_len = jnp.asarray([len(req.prompt)], jnp.int32)
-        logits, row_caches = self._prefill_fn(bucket)(self.params, batch, true_len)
-        # first token
-        self.key, sk = jax.random.split(self.key)
-        tok = self._sampler(logits.astype(jnp.float32), sk,
-                            jnp.asarray([req.sampling.temperature], jnp.float32),
-                            jnp.asarray([req.sampling.top_k], jnp.int32),
-                            jnp.asarray([req.sampling.top_p], jnp.float32))
-        tok_i = int(tok[0])
-        req.output.append(tok_i)
-        req.t_first_token = now
-        req.token_times.append(now)
-        req.state = State.DECODE
-        # install row
-        self.caches = self._insert(self.caches, row_caches, row)
-        prefix = self.cfg.num_vision_tokens or 0
-        self.pos[row] = len(req.prompt) + prefix
-        self.tokens = self.tokens.at[row, 0].set(tok_i)
+    # --------------------------------------------------------------- prefill
+    def _admit_cost(self, req: Request) -> int:
+        """Prefill tokens this request consumes in its admission step."""
+        n = len(req.prompt)
+        if n <= self.buckets[-1]:
+            return _round_bucket(n, self.buckets)
+        return self.chunk
+
+    def _set_row_sampling(self, row: int, req: Request) -> None:
         self._temp[row] = req.sampling.temperature
         self._topk[row] = req.sampling.top_k
         self._topp[row] = req.sampling.top_p
-        self.row_req[row] = req
+
+    def _admit_batch(self, reqs: list[Request], bucket: int, now: float) -> int:
+        """Batched prefill of one bucket group: single forward, batched cache
+        insertion, batched first-token sampling."""
+        G = self._group
+        assert len(reqs) <= G
+        toks = np.zeros((G, bucket), np.int32)
+        true = np.zeros((G,), np.int32)
+        rows = np.full((G,), self.capacity, np.int32)   # pad => dropped
+        temp = np.zeros((G,), np.float32)
+        topk = np.zeros((G,), np.int32)
+        topp = np.ones((G,), np.float32)
+        for i, req in enumerate(reqs):
+            row = self.pool.allocate(req.rid)
+            assert row is not None
+            req.row, req.state, req.t_admit = row, State.PREFILL, now
+            rows[i] = row
+            toks[i, : len(req.prompt)] = req.prompt
+            true[i] = len(req.prompt)
+            temp[i] = req.sampling.temperature
+            topk[i] = req.sampling.top_k
+            topp[i] = req.sampling.top_p
+        batch: dict[str, Any] = {"tokens": jnp.asarray(toks)}
+        if self.cfg.num_vision_tokens:
+            patches = np.zeros((G, self.cfg.num_vision_tokens, self.cfg.d_model),
+                               np.float32)
+            for i, req in enumerate(reqs):
+                if "patches" in req.extras:
+                    patches[i] = np.asarray(req.extras["patches"])[0]
+            batch["patches"] = jnp.asarray(patches)
+        if self.cfg.is_encoder_decoder:
+            frames = np.zeros((G, self.cfg.encoder_seq, self.cfg.d_model),
+                              np.float32)
+            for i, req in enumerate(reqs):
+                if "frames" in req.extras:
+                    frames[i] = np.asarray(req.extras["frames"])[0]
+            batch["frames"] = jnp.asarray(frames)
+        logits, row_caches = self._prefill_fn(bucket, G)(
+            self.params, batch, jnp.asarray(true))
+        self.caches = self._insert(self.caches, row_caches, jnp.asarray(rows))
+        # batched first tokens
+        self.key, sk = jax.random.split(self.key)
+        sampled = self._sampler(logits.astype(jnp.float32), sk,
+                                jnp.asarray(temp), jnp.asarray(topk),
+                                jnp.asarray(topp))
+        sampled = np.asarray(jax.device_get(sampled))
+        prefix = self.cfg.num_vision_tokens or 0
+        new_tokens = np.asarray(self.tokens).copy()
+        for i, req in enumerate(reqs):
+            t = int(sampled[i])
+            row = req.row
+            req.output.append(t)
+            req.t_first_token = now
+            req.token_times.append(now)
+            req.state = State.DECODE
+            self.pos[row] = len(req.prompt) + prefix
+            new_tokens[row, 0] = t
+            self._set_row_sampling(row, req)
+            self.row_req[row] = req
+            self._maybe_finish_first(row, req, now)
+        self.tokens = jnp.asarray(new_tokens)
+        return sum(len(r.prompt) for r in reqs)
+
+    def _admit_chunked(self, req: Request, now: float) -> int:
+        row = self.pool.allocate(req.rid)
+        assert row is not None
+        req.row, req.state, req.t_admit = row, State.PREFILL, now
+        self._prefilling[row] = req
+        self._consumed[row] = 0
+        self._fresh.add(row)
+        self.pos[row] = 0
+        self._set_row_sampling(row, req)
+        return row
+
+    def _run_chunks(self, rows_n: dict[int, int], now: float) -> None:
+        """Advance the selected mid-prefill rows by one chunk each (single
+        pool-wide program call); promote rows that consumed their prompt."""
+        B, C = self.capacity, self.chunk
+        toks = np.zeros((B, C), np.int32)
+        pos0 = np.zeros((B,), np.int32)
+        nval = np.zeros((B,), np.int32)
+        fresh = np.zeros((B,), bool)
+        for row, n in rows_n.items():
+            req = self._prefilling[row]
+            c0 = self._consumed[row]
+            toks[row, :n] = req.prompt[c0:c0 + n]
+            pos0[row] = c0
+            nval[row] = n
+            fresh[row] = row in self._fresh
+        logits, self.caches = self._chunk_program()(
+            self.params, self.caches, jnp.asarray(toks), jnp.asarray(pos0),
+            jnp.asarray(nval), jnp.asarray(fresh))
+        self._fresh -= set(rows_n)
+        done_rows = []
+        for row, n in rows_n.items():
+            self._consumed[row] += n
+            self.pos[row] = self._consumed[row]
+            if self._consumed[row] >= len(self._prefilling[row].prompt):
+                done_rows.append(row)
+        if not done_rows:
+            return
+        self.key, sk = jax.random.split(self.key)
+        sampled = self._sampler(logits.astype(jnp.float32), sk,
+                                jnp.asarray(self._temp), jnp.asarray(self._topk),
+                                jnp.asarray(self._topp))
+        sampled = np.asarray(jax.device_get(sampled))
+        new_tokens = np.asarray(self.tokens).copy()
+        for row in done_rows:
+            req = self._prefilling.pop(row)
+            del self._consumed[row]
+            t = int(sampled[row])
+            req.output.append(t)
+            req.t_first_token = now
+            req.token_times.append(now)
+            req.state = State.DECODE
+            self.pos[row] = len(req.prompt)
+            new_tokens[row, 0] = t
+            self.row_req[row] = req
+            self._maybe_finish_first(row, req, now)
+        self.tokens = jnp.asarray(new_tokens)
+
+    def _maybe_finish_first(self, row: int, req: Request, now: float) -> None:
+        """A request can already be complete at its first (prefill) token —
+        max_new_tokens=1, stop token sampled, or a prompt filling the row —
+        in which case it must not receive a same-step decode token."""
+        stop = req.sampling.stop_token
+        if (len(req.output) >= req.sampling.max_new_tokens
+                or (stop is not None and req.output[-1] == stop)
+                or self.pos[row] >= self.max_len - 1):
+            self._retire(row, now)
 
     def _retire(self, row: int, now: float) -> None:
         req = self.row_req.pop(row)
@@ -169,23 +348,72 @@ class InferenceEngine:
         self.pool.free(row)
         self.finished.append(req)
 
+    # ------------------------------------------------------------------ step
     def step(self, now: float | None = None) -> StepStats:
-        """One engine iteration: admit -> prefill(s) -> one decode step."""
+        """One engine iteration: chunk continuations -> admit (batched
+        bucket prefills + new chunk starts) -> one decode step."""
         now = time.perf_counter() if now is None else now
-        t_pre = 0.0
-        incoming = self.scheduler.next_batch(self.capacity - self.pool.used, now)
-        for req in incoming:
-            t0 = time.perf_counter()
-            self._admit(req, now)
-            t_pre += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        budget = self.scheduler.cfg.prefill_token_budget
+        # a non-positive budget would starve admission forever; clamp to the
+        # minimum that still guarantees one (over-budget) pick per step
+        remaining = math.inf if budget is None else max(budget, 1)
+        prefill_tokens = 0
 
+        # 1. continue in-flight chunked prefills (admission order); the
+        # oldest row always advances so progress is never starved
+        rows_n: dict[int, int] = {}
+        for row, req in self._prefilling.items():
+            n = min(self.chunk, len(req.prompt) - self._consumed[row])
+            if rows_n and remaining < n:
+                continue
+            rows_n[row] = n
+            remaining -= n
+            prefill_tokens += n
+
+        # 2. admission under the remaining budget
+        incoming: list[Request] = []
+        if remaining > 0:
+            free = self.capacity - self.pool.used
+            incoming = self.scheduler.next_batch(
+                free, now, budget=None if budget is None else int(remaining),
+                cost=self._admit_cost)
+        groups: dict[int, list[Request]] = {}
+        for req in incoming:
+            n = len(req.prompt)
+            if n <= self.buckets[-1]:
+                groups.setdefault(_round_bucket(n, self.buckets), []).append(req)
+            elif self._can_chunk:
+                row = self._admit_chunked(req, now)
+                rows_n[row] = min(self.chunk, n)
+                prefill_tokens += rows_n[row]
+            else:  # belt-and-braces: submit() already bounces these
+                req.state = State.REJECTED
+                self.rejected_long += 1
+        for bucket in sorted(groups):
+            prefill_tokens += self._admit_batch(groups[bucket], bucket, now)
+
+        # 3. one pool-wide chunk program for all advancing rows
+        if rows_n:
+            self._run_chunks(rows_n, now)
+        t_pre = time.perf_counter() - t0
+
+        # 4. decode
         tokens_out = 0
         t_dec = 0.0
         if self.row_req:
             t0 = time.perf_counter()
             pos_dev = jnp.asarray(self.pos)
-            logits, self.caches = self._decode(
-                self.params, self.tokens, pos_dev, self.caches)
+            if self._prefilling:
+                live = np.ones((self.capacity,), bool)
+                for row in self._prefilling:
+                    live[row] = False
+                logits, self.caches = self._decode_live(
+                    self.params, self.tokens, pos_dev, self.caches,
+                    jnp.asarray(live))
+            else:
+                logits, self.caches = self._decode(
+                    self.params, self.tokens, pos_dev, self.caches)
             self.key, sk = jax.random.split(self.key)
             sampled = self._sampler(logits.astype(jnp.float32), sk,
                                     jnp.asarray(self._temp), jnp.asarray(self._topk),
@@ -209,7 +437,8 @@ class InferenceEngine:
 
         st = StepStats(t=now, decode_s=t_dec, prefill_s=t_pre,
                        n_prefill=len(incoming), occupancy=self.pool.used,
-                       queue_depth=self.scheduler.depth(), tokens_out=tokens_out)
+                       queue_depth=self.scheduler.depth(), tokens_out=tokens_out,
+                       prefill_tokens=prefill_tokens, chunk_rows=len(rows_n))
         self.history.append(st)
         return st
 
@@ -251,20 +480,28 @@ class InferenceEngine:
         row = self.pool.allocate(req.rid)
         if row is None:
             return False
-        self.caches = self._insert(self.caches, payload["caches"], row)
+        self.caches = self._insert(self.caches, payload["caches"],
+                                   jnp.asarray([row], jnp.int32))
         self.pos[row] = payload["pos"]
         self.tokens = self.tokens.at[row, 0].set(payload["last_token"])
-        self._temp[row] = req.sampling.temperature
-        self._topk[row] = req.sampling.top_k
-        self._topp[row] = req.sampling.top_p
+        self._set_row_sampling(row, req)
         self.row_req[row] = req
         req.row, req.state = row, State.DECODE
         return True
 
     def kv_bytes(self, rid: int) -> int:
-        """Migration payload size (drives the handoff cost model)."""
+        """Migration payload size (drives the handoff cost model), scaled by
+        the request's actual sequence length: leaves with a KV sequence axis
+        are charged min(pos, L) of their L slots; per-row state without one
+        (SSM state / conv tails) is charged in full."""
+        rows = [r for r, q in self.row_req.items() if q.rid == rid]
+        assert rows, f"rid {rid} not active here"
+        n = int(self.pos[rows[0]])
         leaves = jax.tree.leaves(self.caches)
         total = 0
-        for pool, ax in zip(leaves, self._batch_axes):
-            total += pool.nbytes // pool.shape[ax]
+        for pool, ax, L in zip(leaves, self._batch_axes, self._seq_lens):
+            per_row = pool.nbytes // pool.shape[ax]
+            if L is not None:
+                per_row = per_row * min(n, L) // L
+            total += per_row
         return total

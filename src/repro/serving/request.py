@@ -29,7 +29,7 @@ class Request:
     rid: int
     prompt: list[int]                       # token ids
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
-    arrival: float = 0.0                    # event-clock seconds
+    arrival: float | None = None            # event-clock seconds; stamped at submit
     slo_ttft: float | None = None           # seconds; None = best effort
     slo_tpot: float | None = None
     extras: dict[str, Any] = dataclasses.field(default_factory=dict)  # vlm patches / frames

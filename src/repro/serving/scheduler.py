@@ -8,11 +8,18 @@ Policies:
 Admission per engine step follows Orca-style continuous batching: every
 iteration, free rows are refilled from the queue (up to ``max_prefill_per
 _step`` to bound prefill head-of-line blocking of running decodes).
+
+Per-step prefill *work* is additionally bounded by ``prefill_token_budget``:
+the engine passes the budget left after continuing any in-flight chunked
+prefills, and :meth:`Scheduler.next_batch` admits requests in policy order
+until the budget is spent (the first pick always goes through so a single
+long prompt can never be starved by its own cost).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from typing import Callable
 
 from repro.serving.request import Request, State
 
@@ -21,7 +28,8 @@ from repro.serving.request import Request, State
 class SchedulerConfig:
     policy: str = "fcfs"            # fcfs | sjf | slo
     max_queue: int = 10_000
-    max_prefill_per_step: int = 1
+    max_prefill_per_step: int = 4
+    prefill_token_budget: int | None = None  # per-step prefilled-token cap
     admission_timeout: float | None = None   # reject if queued longer (s)
 
 
@@ -36,7 +44,10 @@ class Scheduler:
             req.state = State.REJECTED
             self.rejected += 1
             return False
-        req.arrival = req.arrival or now
+        # ``is None`` — an explicit arrival == 0.0 is a legitimate event-clock
+        # time (simulations start at t=0) and must not be overwritten.
+        if req.arrival is None:
+            req.arrival = now
         self.queue.append(req)
         return True
 
@@ -48,8 +59,17 @@ class Scheduler:
             return dl
         return r.arrival
 
-    def next_batch(self, free_slots: int, now: float) -> list[Request]:
-        """Pop up to min(free_slots, max_prefill_per_step) requests."""
+    def next_batch(self, free_slots: int, now: float,
+                   budget: int | None = None,
+                   cost: Callable[[Request], int] | None = None) -> list[Request]:
+        """Pop up to min(free_slots, max_prefill_per_step) requests.
+
+        ``budget`` caps the summed per-request prefill cost (tokens the engine
+        will prefill for the request *this step* — bucketed length for short
+        prompts, one chunk for long ones); ``cost`` maps a request to that
+        number (default: prompt length).  The first pick is always admitted
+        even if it alone exceeds the budget, so admission always progresses.
+        """
         # expire
         if self.cfg.admission_timeout is not None:
             kept = deque()
@@ -64,7 +84,16 @@ class Scheduler:
         if n <= 0:
             return []
         ordered = sorted(self.queue, key=lambda r: self._key(r, now))
-        picked = ordered[:n]
+        if budget is None:
+            picked = ordered[:n]
+        else:
+            picked, spent = [], 0
+            for r in ordered[:n]:
+                c = cost(r) if cost is not None else len(r.prompt)
+                if picked and spent + c > budget:
+                    break
+                picked.append(r)
+                spent += c
         picked_set = {id(r) for r in picked}
         self.queue = deque(r for r in self.queue if id(r) not in picked_set)
         return picked

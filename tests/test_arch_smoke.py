@@ -11,6 +11,8 @@ from repro.models.lm import make_model
 from repro.training.optimizer import init_opt_state
 from repro.training.steps import make_train_step
 
+pytestmark = pytest.mark.slow  # per-arch train/prefill/decode over the full zoo
+
 B, S, MAX = 2, 32, 48
 
 

@@ -12,6 +12,8 @@ from repro.training import checkpoint as CKPT
 from repro.training.data import DataConfig
 from repro.training.train_loop import Trainer, TrainConfig
 
+pytestmark = pytest.mark.slow  # trainer crash/restart loops
+
 
 def _tree():
     return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),

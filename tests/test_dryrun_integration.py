@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess lower+compile
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

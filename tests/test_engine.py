@@ -71,6 +71,7 @@ def test_engine_greedy_matches_direct_decode(rng):
     assert got == exp, (got, exp)
 
 
+@pytest.mark.slow
 def test_engine_bucketed_prefill_exactness(rng):
     """Same prompt served via different bucket sizes gives identical greedy
     output (right-padding correctness: ring caches, logits gather)."""
@@ -86,6 +87,7 @@ def test_engine_bucketed_prefill_exactness(rng):
     assert outs[0] == outs[1], outs
 
 
+@pytest.mark.slow
 def test_engine_ssm_bucketed_prefill(rng):
     """SSM state must be exact under right-padded prefill."""
     cfg = get_config("mamba2-780m-smoke")
@@ -267,6 +269,7 @@ def test_disaggregated_prefill_decode(rng):
     assert all(r.migrations == 1 for r in done)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["jamba-v0.1-52b-smoke", "mixtral-8x7b-smoke",
                                   "gemma-2b-smoke", "qwen3-moe-30b-a3b-smoke"])
 def test_engine_serves_all_families(arch, rng):

@@ -12,6 +12,8 @@ from repro.kernels.ssd_scan.ops import ssd_chunked_scan
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
 from repro.serving.kv_cache import PagedAllocator
 
+pytestmark = pytest.mark.slow  # pallas interpret-mode kernel sweeps
+
 RNG = np.random.default_rng(7)
 
 

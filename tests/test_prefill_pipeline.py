@@ -1,0 +1,244 @@
+"""Prefill-pipeline regression tests.
+
+Covers the batched + chunked prefill subsystem: long prompts (beyond the
+largest bucket) served via chunked prefill and matching the unchunked
+reference; batched multi-request prefill equivalent to sequential admission;
+arrival=0.0 scheduler semantics; kv_bytes proportional to sequence length.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.lm import make_model
+from repro.serving import InferenceEngine, Request, SamplingParams
+from repro.serving.request import State
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+def _greedy_reference(eng, prompt, n_new):
+    """Unchunked reference: one full-length prefill + straight-line decode,
+    with the engine's own params/max_len."""
+    model = make_model(eng.cfg)
+    toks = jnp.asarray([prompt], jnp.int32)
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, eng.max_len))(
+        eng.params, {"tokens": toks})
+    out = [int(jnp.argmax(logits, -1)[0])]
+    pos = jnp.asarray([len(prompt)], jnp.int32)
+    cur = jnp.asarray([[out[-1]]], jnp.int32)
+    step = jax.jit(model.decode_step)
+    for _ in range(n_new - 1):
+        logits, cache = step(eng.params, cur, pos, cache)
+        out.append(int(jnp.argmax(logits, -1)[0]))
+        cur = jnp.asarray([[out[-1]]], jnp.int32)
+        pos = pos + 1
+    return out
+
+
+# ----------------------------------------------------------- chunked prefill
+@pytest.mark.parametrize("arch", [
+    "qwen2-0.5b-smoke", "mamba2-780m-smoke",
+    pytest.param("gemma3-27b-smoke", marks=pytest.mark.slow),
+])
+def test_long_prompt_served_via_chunks_matches_reference(arch, rng):
+    """A prompt longer than the largest bucket completes (no ValueError) and
+    the greedy output equals the unchunked full-prefill reference.
+    Covers global attention, SSM state carry, and ring (local) layers."""
+    cfg = get_config(arch)
+    eng = InferenceEngine(cfg, capacity=2, max_len=96, buckets=(8, 16), seed=7)
+    prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 39)]
+    eng.submit(Request(rid=0, prompt=list(prompt),
+                       sampling=SamplingParams(max_new_tokens=6)))
+    done = eng.run(max_steps=80)
+    assert len(done) == 1 and done[0].state is State.DONE
+    assert done[0].output == _greedy_reference(eng, prompt, 6)
+    # the prompt was consumed in bounded chunks, not one oversized prefill
+    assert sum(s.chunk_rows for s in eng.history) >= 3
+
+
+def test_chunked_and_bucketed_paths_agree(rng):
+    """The same prompt served through a large bucket vs through chunked
+    prefill (buckets smaller than the prompt) gives identical greedy output."""
+    cfg = get_config("qwen2-0.5b-smoke")
+    prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 13)]
+    outs = []
+    for buckets in [(16,), (8,)]:   # 13 <= 16 bucketed; 13 > 8 chunked
+        eng = InferenceEngine(cfg, capacity=2, max_len=64, buckets=buckets,
+                              seed=3)
+        eng.submit(Request(rid=0, prompt=list(prompt),
+                           sampling=SamplingParams(max_new_tokens=5)))
+        outs.append(eng.run(max_steps=40)[0].output)
+    assert outs[0] == outs[1], outs
+
+
+def test_long_prompt_interleaves_with_decodes(rng):
+    """Running decodes keep producing tokens while a long prompt chunks
+    through prefill under a per-step token budget."""
+    cfg = get_config("qwen2-0.5b-smoke")
+    eng = InferenceEngine(
+        cfg, capacity=4, max_len=96, buckets=(8, 16), seed=11,
+        sched=SchedulerConfig(max_prefill_per_step=4, prefill_token_budget=16))
+    for i in range(3):
+        eng.submit(Request(
+            rid=i, prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, 6)],
+            sampling=SamplingParams(max_new_tokens=10)))
+    eng.submit(Request(rid=3,
+                       prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, 60)],
+                       sampling=SamplingParams(max_new_tokens=4)))
+    # short prompts admitted first step; the 60-token prompt needs >= 4
+    # budgeted chunk steps, during which the shorts must still decode
+    decode_during_chunk = 0
+    for _ in range(200):
+        st = eng.step()
+        if st.chunk_rows and st.tokens_out:
+            decode_during_chunk += 1
+        if not eng.pending():
+            break
+    done = {r.rid: r for r in eng.finished}
+    assert len(done) == 4
+    assert len(done[3].output) == 4
+    assert decode_during_chunk >= 2, "chunked prefill blocked all decodes"
+    # budget bounds per-step prefill work (one 16-token chunk at a time
+    # once the pool is busy)
+    assert max(s.prefill_tokens for s in eng.history) <= 16 + 3 * 8
+
+
+def test_prefill_token_accounting(rng):
+    """StepStats.prefill_tokens sums to the served prompt tokens."""
+    cfg = get_config("qwen2-0.5b-smoke")
+    eng = InferenceEngine(cfg, capacity=4, max_len=96, buckets=(8, 16), seed=2)
+    lens = [5, 12, 40, 7]
+    for i, n in enumerate(lens):
+        eng.submit(Request(rid=i,
+                           prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, n)],
+                           sampling=SamplingParams(max_new_tokens=3)))
+    eng.run(max_steps=100)
+    assert sum(s.prefill_tokens for s in eng.history) == sum(lens)
+
+
+def test_oversized_prompt_rejected_not_crashed(rng):
+    """Prompts that cannot fit a cache row bounce as REJECTED."""
+    cfg = get_config("qwen2-0.5b-smoke")
+    eng = InferenceEngine(cfg, capacity=2, max_len=32, buckets=(8, 16), seed=1)
+    req = Request(rid=0, prompt=[1] * 40)        # > max_len - 1
+    assert not eng.submit(req)
+    assert req.state is State.REJECTED and eng.rejected_long == 1
+    # vision-prefix families cannot chunk: longer-than-bucket bounces too
+    vcfg = get_config("paligemma-3b-smoke")
+    veng = InferenceEngine(vcfg, capacity=2, max_len=48, buckets=(8,), seed=1)
+    vreq = Request(rid=0, prompt=[1] * 20)
+    assert not veng.submit(vreq)
+    assert vreq.state is State.REJECTED
+
+
+# ----------------------------------------------------------- batched prefill
+def test_batched_prefill_matches_sequential_admission(rng):
+    """max_prefill_per_step=4 (one batched call per bucket) produces the
+    same greedy outputs as one-request-per-step admission."""
+    cfg = get_config("qwen2-0.5b-smoke")
+    prompts = [[int(x) for x in rng.integers(0, cfg.vocab_size,
+                                             int(rng.integers(3, 15)))]
+               for _ in range(6)]
+    outs = []
+    for mpps in (4, 1):
+        eng = InferenceEngine(cfg, capacity=8, max_len=64, buckets=(8, 16),
+                              seed=17, sched=SchedulerConfig(
+                                  max_prefill_per_step=mpps))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=list(p),
+                               sampling=SamplingParams(max_new_tokens=5)))
+        done = eng.run(max_steps=60)
+        assert len(done) == 6
+        outs.append({r.rid: r.output for r in done})
+    assert outs[0] == outs[1]
+    # batched engine actually admitted multiple requests in one step
+    # (can't be checked on outs — check the stats history)
+
+
+def test_batched_prefill_admits_multiple_per_step(rng):
+    cfg = get_config("qwen2-0.5b-smoke")
+    eng = InferenceEngine(cfg, capacity=8, max_len=64, buckets=(16,), seed=5)
+    for i in range(4):
+        eng.submit(Request(rid=i,
+                           prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, 9)],
+                           sampling=SamplingParams(max_new_tokens=3)))
+    st = eng.step()
+    assert st.n_prefill == 4, "admission should batch up to max_prefill_per_step"
+    # each admitted request has its prefill first token + one decode token
+    assert all(len(r.output) == 2 for r in eng.row_req.values())
+
+
+def test_max_new_tokens_one_yields_exactly_one(rng):
+    """A request satisfied by its prefill first token must not pick up a
+    same-step decode token (both bucketed and chunked paths)."""
+    cfg = get_config("qwen2-0.5b-smoke")
+    eng = InferenceEngine(cfg, capacity=2, max_len=96, buckets=(8, 16), seed=4)
+    eng.submit(Request(rid=0, prompt=[int(x) for x in rng.integers(0, 64, 6)],
+                       sampling=SamplingParams(max_new_tokens=1)))
+    eng.submit(Request(rid=1, prompt=[int(x) for x in rng.integers(0, 64, 40)],
+                       sampling=SamplingParams(max_new_tokens=1)))
+    done = eng.run(max_steps=60)
+    assert sorted((r.rid, len(r.output)) for r in done) == [(0, 1), (1, 1)]
+
+
+# ----------------------------------------------------------------- scheduler
+def test_arrival_zero_is_preserved():
+    """An explicit arrival == 0.0 must not be overwritten at submit (sjf/slo
+    ordering and timeout expiry in simulations that start at t=0)."""
+    s = Scheduler(SchedulerConfig(policy="fcfs", max_prefill_per_step=2))
+    early = Request(rid=0, prompt=[1] * 4, arrival=0.0)
+    late = Request(rid=1, prompt=[1] * 4, arrival=5.0)
+    s.submit(late, now=5.0)
+    s.submit(early, now=6.0)     # submitted later, but arrived at t=0
+    assert early.arrival == 0.0
+    picked = s.next_batch(2, now=7.0)
+    assert [r.rid for r in picked] == [0, 1]
+
+
+def test_arrival_zero_timeout_expires():
+    s = Scheduler(SchedulerConfig(admission_timeout=5.0))
+    s.submit(Request(rid=0, prompt=[1] * 4, arrival=0.0), now=0.0)
+    assert s.next_batch(1, now=10.0) == []
+    assert s.rejected == 1
+
+
+def test_unstamped_arrival_gets_submit_time():
+    s = Scheduler(SchedulerConfig())
+    r = Request(rid=0, prompt=[1] * 4)
+    s.submit(r, now=3.5)
+    assert r.arrival == 3.5
+
+
+def test_token_budget_bounds_admission():
+    s = Scheduler(SchedulerConfig(max_prefill_per_step=8))
+    for i in range(4):
+        s.submit(Request(rid=i, prompt=[1] * 10), now=float(i))
+    picked = s.next_batch(8, now=9.0, budget=25)
+    assert len(picked) == 2              # 10 + 10 fit, third would exceed
+    # first pick always goes through even when it alone exceeds the budget
+    picked = s.next_batch(8, now=9.0, budget=3)
+    assert len(picked) == 1
+
+
+# ------------------------------------------------------------------ kv_bytes
+def test_kv_bytes_scales_with_sequence_length(rng):
+    cfg = get_config("qwen2-0.5b-smoke")
+    eng = InferenceEngine(cfg, capacity=4, max_len=64, buckets=(8, 32), seed=9)
+    eng.submit(Request(rid=0, prompt=[int(x) for x in rng.integers(0, 64, 4)],
+                       sampling=SamplingParams(max_new_tokens=30)))
+    eng.submit(Request(rid=1, prompt=[int(x) for x in rng.integers(0, 64, 30)],
+                       sampling=SamplingParams(max_new_tokens=30)))
+    eng.step()
+    short, long_ = eng.kv_bytes(0), eng.kv_bytes(1)
+    assert 0 < short < long_
+    # a full-row charge (what the old implementation reported) is strictly
+    # larger than either active request's payload
+    full = sum(leaf.nbytes // leaf.shape[ax] for leaf, ax in
+               zip(jax.tree.leaves(eng.caches), eng._batch_axes))
+    assert long_ < full
+    # growing the sequence grows the payload
+    before = eng.kv_bytes(0)
+    for _ in range(10):
+        eng.step()
+    assert eng.kv_bytes(0) > before
