@@ -22,7 +22,7 @@ import math
 
 @dataclasses.dataclass
 class HPAConfig:
-    metric: str = "latency"         # 'latency' | 'util' | 'queue'
+    metric: str = "latency"         # 'latency' | 'util' | 'queue' | 'kv_util'
     target: float = 1.0             # target metric value (e.g. seconds / util frac)
     min_replicas: int = 1
     max_replicas: int = 8

@@ -3,36 +3,67 @@
 Istio-style request routing over the replicas of one (micro)service.
 Policies: round-robin, least-outstanding-requests, power-of-two-choices,
 weighted join-shortest-queue (weights = replica capacity, e.g. heterogeneous
-hardware).
+hardware), and prefix-affinity routing ("prefix"): requests sharing a prompt
+prefix rendezvous-hash to the same replica so its paged-KV prefix cache
+keeps serving them, with a load guard that spills to the least-loaded
+replica when the affine one is hot — locality must never create a hotspot.
 """
 from __future__ import annotations
 
+import hashlib
 import random
-from typing import Callable, Sequence
+from typing import Callable, Hashable, Sequence
+
+
+def _rendezvous(key: Hashable, idx: int) -> int:
+    h = hashlib.blake2b(f"{key!r}/{idx}".encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "big")
 
 
 class LoadBalancer:
-    def __init__(self, policy: str = "p2c", seed: int = 0):
-        assert policy in ("rr", "least", "p2c", "wjsq")
+    def __init__(self, policy: str = "p2c", seed: int = 0,
+                 affinity_slack: float = 4.0):
+        assert policy in ("rr", "least", "p2c", "wjsq", "prefix")
         self.policy = policy
         self._rr = 0
         self._rng = random.Random(seed)
+        # "prefix": max load gap over the coolest replica before affinity
+        # yields to load balancing
+        self.affinity_slack = affinity_slack
 
     def pick(self, replicas: Sequence, load: Callable[[object], float],
-             weight: Callable[[object], float] = lambda r: 1.0) -> object:
+             weight: Callable[[object], float] = lambda r: 1.0,
+             affinity_key: Hashable | None = None) -> object:
         """Choose a replica.  ``load(r)`` = outstanding work (queue depth or
-        busy seconds); ``weight(r)`` = capacity multiplier."""
+        busy seconds); ``weight(r)`` = capacity multiplier; ``affinity_key``
+        = routing key for the "prefix" policy (e.g. the prompt's first KV
+        block of tokens)."""
         live = [r for r in replicas]
         assert live, "no replicas"
         if len(live) == 1:
             return live[0]
         if self.policy == "rr":
-            self._rr = (self._rr + 1) % len(live)
-            return live[self._rr]
+            # post-increment: replica 0 gets the first pick and the rotation
+            # stays unbiased when the replica count changes
+            i = self._rr % len(live)
+            self._rr += 1
+            return live[i]
         if self.policy == "least":
             return min(live, key=load)
         if self.policy == "p2c":
             a, b = self._rng.sample(live, 2)
             return a if load(a) <= load(b) else b
+        if self.policy == "prefix":
+            if affinity_key is None:
+                return min(live, key=load)
+            lo = min(load(r) for r in live)
+            # rendezvous-hash on a stable replica identity (not the list
+            # position): membership churn then remaps only the keys that
+            # hashed to the departed replica, keeping warm caches warm
+            ranked = sorted(live, key=lambda r: _rendezvous(
+                affinity_key, getattr(r, "lb_id", id(r))), reverse=True)
+            # always terminates: the minimum-load replica passes the guard
+            return next(r for r in ranked
+                        if load(r) <= lo + self.affinity_slack)
         # weighted JSQ: smallest load normalised by capacity
         return min(live, key=lambda r: load(r) / max(weight(r), 1e-9))

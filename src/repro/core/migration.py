@@ -80,6 +80,10 @@ class MigrationManager:
     def migrate(self, src: InferenceEngine, dst: InferenceEngine, rid: int,
                 now: float, src_idx: int = 0, dst_idx: int = 1) -> MigrationEvent | None:
         """Real engine-to-engine handoff (same model config/max_len)."""
+        if getattr(src, "paged", False) or getattr(dst, "paged", False):
+            # paged migration payloads (block-table handoff) are an open
+            # edge — see ROADMAP.md; the control loop skips these replicas
+            return None
         nbytes = src.kv_bytes(rid)
         req, payload = src.extract_row(rid)
         if not dst.adopt(req, payload, now):

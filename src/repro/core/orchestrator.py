@@ -47,7 +47,8 @@ class Orchestrator:
                  cfg: OrchestratorConfig = OrchestratorConfig()):
         self.cfg = cfg
         self.make_engine = make_engine
-        self.engines: list[InferenceEngine] = [make_engine()
+        self._next_lb_id = 0
+        self.engines: list[InferenceEngine] = [self._spawn()
                                                for _ in range(cfg.min_replicas)]
         self._cold: dict[int, int] = {}
         self.profiler = Profiler()
@@ -57,11 +58,27 @@ class Orchestrator:
         self._steps = 0
         self.scale_history: list[tuple[float, int]] = []
 
+    def _spawn(self) -> InferenceEngine:
+        """Create a replica with a stable monotonic identity: prefix-affinity
+        rendezvous hashing keys on it, so routing is reproducible and
+        membership churn remaps only the departed replica's keys."""
+        eng = self.make_engine()
+        eng.lb_id = self._next_lb_id
+        self._next_lb_id += 1
+        return eng
+
     # ------------------------------------------------------------- routing
     def submit(self, req: Request, now: float | None = None) -> None:
         now = time.perf_counter() if now is None else now
         live = [e for i, e in enumerate(self.engines) if self._cold.get(i, 0) <= 0]
-        eng = self.balancer.pick(live, load=lambda e: e.pending())
+        key = None
+        if self.balancer.policy == "prefix":
+            # route by the prompt's first KV block so requests sharing a
+            # system prefix land where its blocks are already cached
+            bs = getattr(live[0], "block_size", 16) if live else 16
+            key = tuple(req.prompt[:bs])
+        eng = self.balancer.pick(live, load=lambda e: e.pending(),
+                                 affinity_key=key)
         req.replica = self.engines.index(eng)
         eng.submit(req, now)
 
@@ -71,11 +88,16 @@ class Orchestrator:
         occ = sum(e.pool.used for e in self.engines)
         self.profiler.observe_util("cluster", now,
                                    occ / max(1, sum(e.capacity for e in self.engines)))
+        # KV-memory pressure: per-block on paged replicas (real bytes held),
+        # per-row on dense — an autoscaler signal alongside queue depth
         cur = len(self.engines)
-        new = self.autoscaler.evaluate(now, cur, float(depth))
+        kv = sum(e.kv_utilization() for e in self.engines) / max(cur, 1)
+        self.profiler.observe_util("cluster/kv", now, kv)
+        metric = kv if self.cfg.hpa.metric == "kv_util" else float(depth)
+        new = self.autoscaler.evaluate(now, cur, metric)
         if new > cur:
             for i in range(new - cur):
-                self.engines.append(self.make_engine())
+                self.engines.append(self._spawn())
                 self._cold[len(self.engines) - 1] = self.cfg.cold_start_steps
             self.scale_history.append((now, new))
         elif new < cur:
@@ -128,11 +150,17 @@ class Orchestrator:
                 continue
             st = eng.step(now)
             self.profiler.observe_latency(f"engine/{i}/decode", now, st.decode_s)
+            self.profiler.observe_util(f"engine/{i}/kv", now, st.kv_util)
             if st.prefill_tokens:
                 self.profiler.observe_latency(f"engine/{i}/prefill", now,
                                               st.prefill_s)
                 self.profiler.observe_tokens(f"engine/{i}/prefill", now,
-                                             st.prefill_tokens)
+                                             st.prefill_tokens_true)
+                self.profiler.observe_tokens(f"engine/{i}/prefill_padded", now,
+                                             st.prefill_tokens_padded)
+            if st.prefix_hit_tokens:
+                self.profiler.observe_tokens(f"engine/{i}/prefix_hits", now,
+                                             st.prefix_hit_tokens)
         self._steps += 1
         if self._steps % self.cfg.control_every_steps == 0:
             self._control(now)

@@ -102,7 +102,8 @@ class LM:
 
     # ------------------------------------------------------------- blocks
     def _block(self, p, x, kind, is_moe, *, mode, positions, cache, pos,
-               prefix_len, max_len, shd, true_len=None):
+               prefix_len, max_len, shd, true_len=None, block_table=None,
+               live=None):
         cfg, perf = self.cfg, self.perf
         h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
         new_cache = None
@@ -127,6 +128,49 @@ class LM:
                 mask = L.cache_valid_mask(new_cache, pos, ring=window > 0, window=window)
                 ctx = L.attention_decode(q, new_cache["k"].astype(q.dtype),
                                          new_cache["v"].astype(q.dtype), mask)
+            elif mode == "paged_decode":
+                # cache = per-layer paged pools; one write DMA + decode
+                # attention driven by the shared per-row block table.  The
+                # Pallas kernel is the accelerator path; the jnp path gathers
+                # the pools into the dense slot layout and reuses
+                # attention_decode bit-for-bit, so a paged engine is
+                # token-identical to a dense one on CPU.
+                from repro.kernels.paged_attention.ops import paged_decode_attention
+                from repro.serving.kv_cache import paged_gather, paged_write
+                kp, vp = paged_write(cache["k"], cache["v"], block_table, pos,
+                                     k[:, 0], v[:, 0], live=live)
+                if perf.use_pallas:
+                    ctx_len = pos + 1
+                    if live is not None:
+                        ctx_len = jnp.where(live, ctx_len, 0)
+                    ctx = paged_decode_attention(
+                        q[:, 0], kp, vp, block_table, ctx_len,
+                        use_pallas=True,
+                        interpret=perf.pallas_interpret)[:, None]
+                else:
+                    S_ctx = block_table.shape[1] * cache["k"].shape[1]
+                    gk = paged_gather(kp, block_table, S_ctx)
+                    gv = paged_gather(vp, block_table, S_ctx)
+                    mask = (jnp.arange(S_ctx, dtype=jnp.int32)[None, :]
+                            <= pos[:, None])
+                    if live is not None:
+                        mask = jnp.logical_and(mask, live[:, None])
+                    ctx = L.attention_decode(q, gk.astype(q.dtype),
+                                             gv.astype(q.dtype), mask)
+                new_cache = {"k": kp, "v": vp}
+            elif mode == "paged_chunk":
+                # attend previously-written blocks (positions < pos0) through
+                # a gathered contiguous view, then append this chunk's k/v
+                # into allocator-extended blocks
+                from repro.serving.kv_cache import paged_gather, paged_write_chunk
+                S_ctx = block_table.shape[1] * cache["k"].shape[1]
+                gk = paged_gather(cache["k"], block_table, S_ctx).astype(q.dtype)
+                gv = paged_gather(cache["v"], block_table, S_ctx).astype(q.dtype)
+                ctx = L.attention_chunk(q, k, v, {"k": gk, "v": gv}, pos,
+                                        window=0, ring=False)
+                kp, vp = paged_write_chunk(cache["k"], cache["v"], block_table,
+                                           pos, true_len, k, v)
+                new_cache = {"k": kp, "v": vp}
             elif mode == "chunk":
                 # attend the pre-write cache + this chunk's own k/v, then
                 # append the chunk (pos = chunk start, true_len = valid count)
@@ -174,14 +218,15 @@ class LM:
 
     # ------------------------------------------------------------- trunk
     def _trunk(self, params, x, *, mode, positions, caches, pos, prefix_len,
-               max_len, shd, true_len=None):
+               max_len, shd, true_len=None, block_table=None, live=None):
         """Run all layers; returns (x, new_caches, aux_total)."""
         cfg, perf = self.cfg, self.perf
+        cached_modes = ("decode", "chunk", "paged_decode", "paged_chunk")
 
         def group_body(carry, xs):
             x, aux = carry
             gparams = xs[0]
-            gcache = xs[1] if mode in ("decode", "chunk") else None
+            gcache = xs[1] if mode in cached_modes else None
             new_entries = {}
             for j in range(self.period):
                 c = gcache[f"m{j}"] if gcache is not None else None
@@ -189,7 +234,7 @@ class LM:
                     gparams[f"m{j}"], x, self.kinds[j], self.moes[j],
                     mode=mode, positions=positions, cache=c, pos=pos,
                     prefix_len=prefix_len, max_len=max_len, shd=shd,
-                    true_len=true_len)
+                    true_len=true_len, block_table=block_table, live=live)
                 aux = aux + a
                 if nc is not None:
                     new_entries[f"m{j}"] = nc
@@ -221,19 +266,19 @@ class LM:
             group_caches = jax.tree.map(lambda *xs_: jnp.stack(xs_), *new_groups)
         else:
             xs = (params["blocks"],)
-            if mode in ("decode", "chunk"):
+            if mode in cached_modes:
                 xs = (params["blocks"], caches["blocks"])
             (x, aux), group_caches = jax.lax.scan(body, (x, jnp.zeros((), f32)), xs)
 
         tail_caches = {}
         for i in self.tail_layers:
             tp = params["tail"][f"t{i}"]
-            c = caches["tail"][f"t{i}"] if mode in ("decode", "chunk") else None
+            c = caches["tail"][f"t{i}"] if mode in cached_modes else None
             x, nc, a = self._block(
                 tp, x, cfg.layer_kind(i), cfg.layer_is_moe(i),
                 mode=mode, positions=positions, cache=c, pos=pos,
                 prefix_len=prefix_len, max_len=max_len, shd=shd,
-                true_len=true_len)
+                true_len=true_len, block_table=block_table, live=live)
             aux = aux + a
             if nc is not None:
                 tail_caches[f"t{i}"] = nc
@@ -339,6 +384,80 @@ class LM:
         x_last = jnp.take_along_axis(x, li, axis=1)
         logits = L.unembed_logits(params["embed"], x_last, cfg)[:, 0]
         return logits, caches
+
+    # ------------------------------------------------------------- paged
+    def supports_paged(self) -> bool:
+        """Paged KV serving covers pure decoders whose every layer is global
+        attention: SSM/conv state is per-row (nothing to page), ring layers
+        keep their own slot-position bookkeeping, and vision/encoder
+        prefixes pin absolute layout.  The engine falls back to the dense
+        RowPool backend for those families."""
+        cfg = self.cfg
+        kinds = set(self.kinds) | {cfg.layer_kind(i) for i in self.tail_layers}
+        return (not cfg.is_encoder_decoder and not cfg.num_vision_tokens
+                and kinds == {"attn"} and cfg.window_for("attn") == 0)
+
+    def paged_cache_specs(self, num_blocks: int, block_size: int) -> dict:
+        """Per-layer paged pool specs, mirroring :meth:`cache_specs`'s tree
+        structure so the same scan-over-groups trunk consumes them.  Every
+        layer indexes its pool through one shared per-row block table."""
+        assert self.supports_paged(), f"{self.cfg.name}: not paged-servable"
+        cfg = self.cfg
+        kv_dtype = jnp.dtype(self.perf.kv_dtype)
+
+        def entry():
+            shape = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+            axes = ("kv_blocks", "kv_slot", "kv_heads", "qkv")
+            return {"k": P.ParamSpec(shape, axes, dtype=kv_dtype, init="zeros"),
+                    "v": P.ParamSpec(shape, axes, dtype=kv_dtype, init="zeros")}
+
+        specs = {"blocks": P.stack({f"m{j}": entry()
+                                    for j in range(self.period)}, self.groups)}
+        if self.tail_layers:
+            specs["tail"] = {f"t{i}": entry() for i in self.tail_layers}
+        return specs
+
+    def decode_step_paged(self, params, tokens, pos, pools, block_table,
+                          live=None, shd=L._noop_shd):
+        """Decode step against paged KV pools.
+
+        tokens (B,1) int32; pos (B,) int32 absolute positions; pools: the
+        paged cache tree (:meth:`paged_cache_specs`); block_table
+        (B, max_blk) int32, -1 = unmapped; live (B,) bool — False rows
+        (empty or mid-prefill) neither write their token nor count context.
+        Returns (logits (B,V) f32, new pools)."""
+        cfg = self.cfg
+        x = L.embed_apply(params["embed"], tokens, cfg)
+        positions = pos[:, None]
+        x, pools, _ = self._trunk(params, x, mode="paged_decode",
+                                  positions=positions, caches=pools, pos=pos,
+                                  prefix_len=0, max_len=0, shd=shd,
+                                  block_table=block_table, live=live)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.unembed_logits(params["embed"], x, cfg)[:, 0]
+        return logits, pools
+
+    def prefill_chunk_paged(self, params, tokens, pos0, n_valid, pools,
+                            block_table, shd=L._noop_shd):
+        """Chunked prefill appending into paged pools (the paged counterpart
+        of :meth:`prefill_chunk`).  A prefix-cache hit simply starts the
+        first chunk at pos0 = n_cached: the shared blocks already hold those
+        positions' KV, so the skipped tokens are never embedded or attended.
+        Rows with n_valid == 0 are exact no-ops."""
+        cfg = self.cfg
+        x = L.embed_apply(params["embed"], tokens, cfg)
+        x = shd(x, ("batch", "act_seq", "embed"))
+        C = tokens.shape[1]
+        positions = pos0[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        x, pools, _ = self._trunk(params, x, mode="paged_chunk",
+                                  positions=positions, caches=pools, pos=pos0,
+                                  prefix_len=0, max_len=0, shd=shd,
+                                  true_len=n_valid, block_table=block_table)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        li = jnp.maximum(n_valid - 1, 0)[:, None, None]
+        x_last = jnp.take_along_axis(x, li, axis=1)
+        logits = L.unembed_logits(params["embed"], x_last, cfg)[:, 0]
+        return logits, pools
 
     def decode_step(self, params, tokens, pos, caches, shd=L._noop_shd):
         """tokens (B,1) int32, pos (B,) int32 absolute positions in the full

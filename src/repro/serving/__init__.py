@@ -1,3 +1,4 @@
 from repro.serving.engine import InferenceEngine, StepStats  # noqa: F401
+from repro.serving.prefix_cache import PrefixCache  # noqa: F401
 from repro.serving.request import Request, SamplingParams, State  # noqa: F401
 from repro.serving.scheduler import Scheduler, SchedulerConfig  # noqa: F401

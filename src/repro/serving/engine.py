@@ -37,6 +37,7 @@ from repro.configs.perf import BASELINE, PerfConfig
 from repro.models import params as P
 from repro.models.lm import make_model
 from repro.serving.kv_cache import RowPool
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, State
 from repro.serving.sampling import make_sampler
 from repro.serving.scheduler import Scheduler, SchedulerConfig
@@ -60,6 +61,19 @@ class StepStats:
     tokens_out: int
     prefill_tokens: int = 0     # prompt tokens prefilled this step (all paths)
     chunk_rows: int = 0         # rows advanced by the chunked-prefill program
+    # cost-model split: what the step computed vs. what requests needed.
+    # Dense charges bucket round-up / chunk slice width; the paged backend's
+    # pool-wide chunk program masks rather than pads per row, so there
+    # padded == true (both cache-aware: prefix hits are never charged).
+    prefill_tokens_padded: int = 0  # incl. bucket round-up / chunk slice width
+    prefill_tokens_true: int = 0    # actual prompt tokens advanced
+    # paged-KV / prefix-cache telemetry (zero on the dense backend)
+    prefix_hit_tokens: int = 0      # prompt tokens skipped at admission
+    prefix_hit_rate: float = 0.0    # cumulative token hit rate
+    kv_blocks_used: int = 0         # blocks referenced by live rows
+    kv_blocks_cached: int = 0       # blocks retained by the prefix index
+    kv_util: float = 0.0            # live-block (paged) / row (dense) fraction
+    kv_frag: float = 0.0            # wasted tail-of-block slots / allocated
 
 
 class InferenceEngine:
@@ -68,7 +82,11 @@ class InferenceEngine:
                  perf: PerfConfig = BASELINE,
                  sched: SchedulerConfig = SchedulerConfig(),
                  buckets: tuple[int, ...] = (16, 32, 64),
+                 kv_backend: str = "dense",
+                 block_size: int = 16, num_blocks: int | None = None,
+                 enable_prefix_cache: bool = True,
                  seed: int = 0):
+        assert kv_backend in ("dense", "paged")
         self.cfg = cfg
         self.perf = perf
         self.model = make_model(cfg, perf)
@@ -79,6 +97,10 @@ class InferenceEngine:
         # chunked prefill appends at absolute text positions — it covers pure
         # decoders; vision-prefix and encoder-decoder requests stay bucketed
         self._can_chunk = not (cfg.is_encoder_decoder or cfg.num_vision_tokens)
+        # paged KV backend: pure global-attention decoders only; families
+        # with per-row state (SSM/conv, ring slots, enc-dec, vision prefix)
+        # keep the dense RowPool backend — the engine chooses per config
+        self.paged = kv_backend == "paged" and self.model.supports_paged()
         if params is None:
             params = P.init(jax.random.PRNGKey(seed), self.model.param_specs())
         self.params = params
@@ -99,7 +121,28 @@ class InferenceEngine:
         # per-leaf KV sequence axis length (None: per-row state, e.g. SSM)
         self._seq_lens = [s.shape[s.axes.index("act_kv")]
                           if "act_kv" in s.axes else None for s in spec_leaves]
-        self.caches = P.init(jax.random.PRNGKey(0), cache_specs)
+        if self.paged:
+            self.block_size = block_size
+            self.max_blk = -(-max_len // block_size)
+            # default pool = the dense backend's worst-case footprint; KV is
+            # *charged* per block, so idle tail blocks become prefix-cache
+            # retention instead of dead per-row reservation
+            self.num_blocks = (capacity * self.max_blk if num_blocks is None
+                               else num_blocks)
+            self.prefix = PrefixCache(self.num_blocks, block_size)
+            self.prefix_enabled = enable_prefix_cache
+            paged_specs = self.model.paged_cache_specs(self.num_blocks,
+                                                       block_size)
+            pleaves = jax.tree.leaves(paged_specs, is_leaf=P.is_spec)
+            self._pool_block_axes = [s.axes.index("kv_blocks") for s in pleaves]
+            self.caches = P.init(jax.random.PRNGKey(0), paged_specs)
+            self.block_tables = np.full((capacity, self.max_blk), -1, np.int32)
+            self._row_blocks: dict[int, list[int]] = {}
+            self._row_reserved: dict[int, int] = {}
+            self._reserved_total = 0
+            self._hit_tokens_step = 0
+        else:
+            self.caches = P.init(jax.random.PRNGKey(0), cache_specs)
         self.tokens = jnp.zeros((capacity, 1), jnp.int32)
         self.pos = np.zeros((capacity,), np.int32)
 
@@ -123,6 +166,17 @@ class InferenceEngine:
         self._prefill = {}  # (bucket, group) -> jit
         self._insert = jax.jit(self._insert_rows_impl, donate_argnums=(0,))
         self._chunk_fn = None  # lazily-built chunked-prefill program
+        if self.paged:
+            self._decode_paged = jax.jit(
+                lambda p, t, pos, c, bt, live:
+                    self.model.decode_step_paged(p, t, pos, c, bt, live),
+                donate_argnums=(3,))
+            self._chunk_paged = jax.jit(
+                lambda p, t, pos0, nv, c, bt:
+                    self.model.prefill_chunk_paged(p, t, pos0, nv, c, bt),
+                donate_argnums=(4,))
+            self._copy_block = jax.jit(self._copy_block_impl,
+                                       donate_argnums=(0,))
         self.history: list[StepStats] = []
         self.finished: list[Request] = []
 
@@ -179,6 +233,91 @@ class InferenceEngine:
             self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1,))
         return self._chunk_fn
 
+    # -------------------------------------------------- paged block plumbing
+    def _copy_block_impl(self, caches, src, dst):
+        """Copy one KV block across every layer pool (copy-on-write)."""
+        out = []
+        for pool, ax in zip(jax.tree.leaves(caches), self._pool_block_axes):
+            blk = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=ax)
+            out.append(jax.lax.dynamic_update_slice_in_dim(pool, blk, dst,
+                                                           axis=ax))
+        return jax.tree.unflatten(jax.tree.structure(caches), out)
+
+    def _blocks_horizon(self, req: Request, n_blocks_hit: int,
+                        tail_hit: bool) -> int:
+        """New blocks this request may still need at its peak length: total
+        footprint minus cache-shared blocks, plus one CoW replacement if the
+        shared tail block must be copied before the first append."""
+        total = min(len(req.prompt) + req.sampling.max_new_tokens, self.max_len)
+        return max(-(-total // self.block_size) - n_blocks_hit, 0) + int(tail_hit)
+
+    def _paged_available(self) -> int:
+        """Blocks a new request could still claim without over-committing:
+        free + evictable-cache minus what live rows have reserved."""
+        return (self.prefix.free_blocks + self.prefix.evictable_blocks
+                - self._reserved_total)
+
+    def _take_reserved(self, row: int, n: int) -> None:
+        take = min(self._row_reserved.get(row, 0), n)
+        if take:
+            self._row_reserved[row] -= take
+            self._reserved_total -= take
+
+    def _ensure_blocks(self, row: int, upto_tokens: int) -> None:
+        """Grow the row's block list to cover positions [0, upto_tokens)."""
+        blocks = self._row_blocks[row]
+        need = -(-upto_tokens // self.block_size) - len(blocks)
+        if need <= 0:
+            return
+        new = self.prefix.allocate(need)
+        if new is None:
+            raise RuntimeError(
+                f"paged KV pool exhausted: need {need} blocks, "
+                f"{self.prefix.free_blocks} free / "
+                f"{self.prefix.evictable_blocks} evictable "
+                f"(num_blocks={self.num_blocks})")
+        self.block_tables[row, len(blocks):len(blocks) + need] = new
+        blocks.extend(new)
+        self._take_reserved(row, need)
+
+    def _ensure_writable(self, row: int, block_idx: int) -> None:
+        """Copy-on-write: the block about to take an append may be shared
+        with other rows or retained by the prefix index (a matched partial
+        tail).  Writing in place would corrupt those readers, so the row
+        gets a private copy first."""
+        blocks = self._row_blocks[row]
+        if block_idx >= len(blocks):
+            return
+        old = blocks[block_idx]
+        if not self.prefix.needs_cow(old):
+            return
+        new = self.prefix.allocate(1)
+        if new is None:
+            raise RuntimeError("paged KV pool exhausted during copy-on-write")
+        self.caches = self._copy_block(self.caches, jnp.int32(old),
+                                       jnp.int32(new[0]))
+        blocks[block_idx] = new[0]
+        self.block_tables[row, block_idx] = new[0]
+        self.prefix.decref(old)
+        self.prefix.cow_copies += 1
+        self._take_reserved(row, 1)
+
+    def _release_row(self, row: int, req: Request, insert: bool) -> None:
+        """Return a row's blocks: index them under the sequence's tokens
+        first (so the *next* request with this prefix skips its prefill),
+        then drop the row's references — cached blocks become LRU-evictable
+        instead of being zeroed, uncached ones go back to the free list."""
+        blocks = self._row_blocks.pop(row, None)
+        if blocks is None:
+            return
+        if insert and self.prefix_enabled:
+            n_valid = int(self.pos[row])        # KV covers positions [0, pos)
+            seq = (list(req.prompt) + list(req.output))[:n_valid]
+            self.prefix.insert(seq, blocks, n_valid)
+        self.prefix.release(blocks)
+        self.block_tables[row, :] = -1
+        self._reserved_total -= self._row_reserved.pop(row, 0)
+
     # ------------------------------------------------------------- interface
     def submit(self, req: Request, now: float | None = None) -> bool:
         now = time.perf_counter() if now is None else now
@@ -192,18 +331,46 @@ class InferenceEngine:
             req.state = State.REJECTED
             self.rejected_long += 1
             return False
+        if self.paged:
+            total = min(len(req.prompt) + req.sampling.max_new_tokens,
+                        self.max_len)
+            if -(-total // self.block_size) > self.num_blocks:
+                # an under-provisioned block pool can never map this request
+                req.state = State.REJECTED
+                self.rejected_long += 1
+                return False
         return self.scheduler.submit(req, now)
 
     def pending(self) -> int:
         return self.scheduler.depth() + self.pool.used
 
     # --------------------------------------------------------------- prefill
-    def _admit_cost(self, req: Request) -> int:
-        """Prefill tokens this request consumes in its admission step."""
+    def _admit_cost(self, req: Request) -> tuple[int, int]:
+        """(padded, true) prefill tokens this request consumes in its
+        admission step.  Padded counts the compute actually launched (bucket
+        round-up, chunk slice); true counts prompt tokens.  On the paged
+        backend the cost is cache-aware: tokens whose KV the prefix cache
+        already holds are never prefilled, so they cost nothing."""
         n = len(req.prompt)
+        if self.paged:
+            n_rem = n - (self._cached_prefix_len(req)
+                         if self.prefix_enabled else 0)
+            c = min(self.chunk, n_rem)
+            return c, c
         if n <= self.buckets[-1]:
-            return _round_bucket(n, self.buckets)
-        return self.chunk
+            return _round_bucket(n, self.buckets), n
+        return self.chunk, min(self.chunk, n)
+
+    def _cached_prefix_len(self, req: Request) -> int:
+        """Memoised prefix-cache lookup: _admit_cost runs for every queued
+        candidate every step, so repeat the (O(prompt) tuple-hashing) walk
+        only when the index has actually changed."""
+        memo = req.extras.get("_pc_lookup")
+        gen = self.prefix.generation
+        if memo is None or memo[0] != gen:
+            memo = (gen, self.prefix.lookup(req.prompt))
+            req.extras["_pc_lookup"] = memo
+        return memo[1]
 
     def _set_row_sampling(self, row: int, req: Request) -> None:
         self._temp[row] = req.sampling.temperature
@@ -283,6 +450,52 @@ class InferenceEngine:
         self._set_row_sampling(row, req)
         return row
 
+    def _admit_paged(self, req: Request, now: float) -> int | None:
+        """Admit onto the paged backend (every prompt goes through the chunk
+        pipeline).  The prefix cache is consulted first: matched blocks are
+        mapped read-shared into the row's block table and their tokens are
+        never prefilled.  Returns None — leave the request queued — when the
+        block pool cannot cover the request's worst-case footprint without
+        over-committing blocks other live rows may still claim."""
+        blocks, n_hit, tail_hit = [], 0, False
+        if self.prefix_enabled:
+            blocks, n_hit = self.prefix.match(req.prompt)
+            tail_hit = n_hit % self.block_size != 0
+        horizon = self._blocks_horizon(req, len(blocks), tail_hit)
+        if tail_hit and horizon > self._paged_available():
+            # the CoW slack block can be unsatisfiable when the request's
+            # footprint spans the whole pool: drop the partial-tail hit
+            # (keep the aligned full-block hits) instead of deadlocking
+            dropped = n_hit % self.block_size
+            self.prefix.decref(blocks.pop())
+            self.prefix.hit_tokens -= dropped
+            self.prefix.miss_tokens += dropped
+            n_hit -= dropped
+            tail_hit = False
+            horizon = self._blocks_horizon(req, len(blocks), False)
+        if horizon > self._paged_available():
+            self.prefix.release(blocks)
+            # nothing was served: roll the hit/miss counters back so a
+            # request retried every step doesn't inflate the reported rate
+            self.prefix.hit_tokens -= n_hit
+            self.prefix.miss_tokens -= len(req.prompt) - n_hit
+            return None
+        row = self.pool.allocate(req.rid)
+        assert row is not None
+        req.row, req.state, req.t_admit = row, State.PREFILL, now
+        req.prefix_hit_tokens = n_hit
+        self._row_blocks[row] = list(blocks)
+        self.block_tables[row, :] = -1
+        self.block_tables[row, :len(blocks)] = blocks
+        self._row_reserved[row] = horizon
+        self._reserved_total += horizon
+        self._prefilling[row] = req
+        self._consumed[row] = n_hit          # cached tokens: already prefilled
+        self.pos[row] = n_hit
+        self._set_row_sampling(row, req)
+        self._hit_tokens_step += n_hit
+        return row
+
     def _run_chunks(self, rows_n: dict[int, int], now: float) -> None:
         """Advance the selected mid-prefill rows by one chunk each (single
         pool-wide program call); promote rows that consumed their prompt."""
@@ -298,9 +511,19 @@ class InferenceEngine:
             pos0[row] = c0
             nval[row] = n
             fresh[row] = row in self._fresh
-        logits, self.caches = self._chunk_program()(
-            self.params, self.caches, jnp.asarray(toks), jnp.asarray(pos0),
-            jnp.asarray(nval), jnp.asarray(fresh))
+            if self.paged:
+                # map blocks for this chunk's span; CoW a shared first block
+                self._ensure_blocks(row, c0 + n)
+                self._ensure_writable(row, c0 // self.block_size)
+        if self.paged:
+            logits, self.caches = self._chunk_paged(
+                self.params, jnp.asarray(toks), jnp.asarray(pos0),
+                jnp.asarray(nval), self.caches,
+                jnp.asarray(self.block_tables))
+        else:
+            logits, self.caches = self._chunk_program()(
+                self.params, self.caches, jnp.asarray(toks), jnp.asarray(pos0),
+                jnp.asarray(nval), jnp.asarray(fresh))
         self._fresh -= set(rows_n)
         done_rows = []
         for row, n in rows_n.items():
@@ -345,6 +568,8 @@ class InferenceEngine:
         req.state = State.DONE
         req.t_finish = now
         req.row = None
+        if self.paged:
+            self._release_row(row, req, insert=True)
         self.pool.free(row)
         self.finished.append(req)
 
@@ -359,6 +584,9 @@ class InferenceEngine:
         # minimum that still guarantees one (over-budget) pick per step
         remaining = math.inf if budget is None else max(budget, 1)
         prefill_tokens = 0
+        prefill_padded = 0
+        if self.paged:
+            self._hit_tokens_step = 0
 
         # 1. continue in-flight chunked prefills (admission order); the
         # oldest row always advances so progress is never starved
@@ -370,6 +598,7 @@ class InferenceEngine:
             rows_n[row] = n
             remaining -= n
             prefill_tokens += n
+            prefill_padded += n if self.paged else self.chunk
 
         # 2. admission under the remaining budget
         incoming: list[Request] = []
@@ -379,19 +608,36 @@ class InferenceEngine:
                 free, now, budget=None if budget is None else int(remaining),
                 cost=self._admit_cost)
         groups: dict[int, list[Request]] = {}
-        for req in incoming:
+        admitted = 0
+        for i, req in enumerate(incoming):
             n = len(req.prompt)
-            if n <= self.buckets[-1]:
+            if self.paged:
+                row = self._admit_paged(req, now)
+                if row is None:
+                    # KV blocks exhausted: requeue (FCFS order preserved)
+                    # and stop admitting until blocks free up
+                    for r in reversed(incoming[i:]):
+                        self.scheduler.queue.appendleft(r)
+                    break
+                rows_n[row] = min(self.chunk, n - self._consumed[row])
+                prefill_tokens += rows_n[row]
+                prefill_padded += rows_n[row]
+                admitted += 1
+            elif n <= self.buckets[-1]:
                 groups.setdefault(_round_bucket(n, self.buckets), []).append(req)
+                admitted += 1
             elif self._can_chunk:
                 row = self._admit_chunked(req, now)
                 rows_n[row] = min(self.chunk, n)
                 prefill_tokens += rows_n[row]
+                prefill_padded += self.chunk
+                admitted += 1
             else:  # belt-and-braces: submit() already bounces these
                 req.state = State.REJECTED
                 self.rejected_long += 1
         for bucket in sorted(groups):
             prefill_tokens += self._admit_batch(groups[bucket], bucket, now)
+            prefill_padded += bucket * len(groups[bucket])
 
         # 3. one pool-wide chunk program for all advancing rows
         if rows_n:
@@ -403,17 +649,31 @@ class InferenceEngine:
         t_dec = 0.0
         if self.row_req:
             t0 = time.perf_counter()
-            pos_dev = jnp.asarray(self.pos)
-            if self._prefilling:
+            if self.paged:
+                # map the block each row's next token lands in (CoW'd if the
+                # prefix cache or another row still reads it); dead rows are
+                # masked so their writes drop instead of corrupting blocks
+                live = np.zeros((self.capacity,), bool)
+                for row in self.row_req:
+                    live[row] = True
+                    self._ensure_blocks(row, int(self.pos[row]) + 1)
+                    self._ensure_writable(
+                        row, int(self.pos[row]) // self.block_size)
+                logits, self.caches = self._decode_paged(
+                    self.params, self.tokens, jnp.asarray(self.pos),
+                    self.caches, jnp.asarray(self.block_tables),
+                    jnp.asarray(live))
+            elif self._prefilling:
                 live = np.ones((self.capacity,), bool)
                 for row in self._prefilling:
                     live[row] = False
                 logits, self.caches = self._decode_live(
-                    self.params, self.tokens, pos_dev, self.caches,
-                    jnp.asarray(live))
+                    self.params, self.tokens, jnp.asarray(self.pos),
+                    self.caches, jnp.asarray(live))
             else:
                 logits, self.caches = self._decode(
-                    self.params, self.tokens, pos_dev, self.caches)
+                    self.params, self.tokens, jnp.asarray(self.pos),
+                    self.caches)
             self.key, sk = jax.random.split(self.key)
             sampled = self._sampler(logits.astype(jnp.float32), sk,
                                     jnp.asarray(self._temp), jnp.asarray(self._topk),
@@ -436,9 +696,23 @@ class InferenceEngine:
             self.tokens = jnp.asarray(new_tokens)
 
         st = StepStats(t=now, decode_s=t_dec, prefill_s=t_pre,
-                       n_prefill=len(incoming), occupancy=self.pool.used,
+                       n_prefill=admitted, occupancy=self.pool.used,
                        queue_depth=self.scheduler.depth(), tokens_out=tokens_out,
-                       prefill_tokens=prefill_tokens, chunk_rows=len(rows_n))
+                       prefill_tokens=prefill_tokens, chunk_rows=len(rows_n),
+                       prefill_tokens_padded=prefill_padded,
+                       prefill_tokens_true=prefill_tokens)
+        if self.paged:
+            alloc = sum(len(b) for b in self._row_blocks.values()) \
+                * self.block_size
+            live_tok = int(sum(int(self.pos[r]) for r in self._row_blocks))
+            st.prefix_hit_tokens = self._hit_tokens_step
+            st.prefix_hit_rate = self.prefix.hit_rate()
+            st.kv_blocks_used = self.prefix.used_blocks
+            st.kv_blocks_cached = self.prefix.cached_blocks
+            st.kv_util = self.prefix.utilization()
+            st.kv_frag = 0.0 if alloc == 0 else 1.0 - live_tok / alloc
+        else:
+            st.kv_util = self.pool.utilization()
         self.history.append(st)
         return st
 
@@ -454,6 +728,10 @@ class InferenceEngine:
         """Remove a mid-generation request, returning its migration payload
         (request, row cache tree with batch dim 1, absolute pos, last token).
         The row is freed (Llumnix-style pause-and-copy handoff)."""
+        if self.paged:
+            raise NotImplementedError(
+                "paged migration payloads (block-table handoff) are an open "
+                "edge — see ROADMAP.md; migrate dense replicas only")
         rows = [r for r, q in self.row_req.items() if q.rid == rid]
         assert rows, f"rid {rid} not active here"
         row = rows[0]
@@ -476,6 +754,9 @@ class InferenceEngine:
     def adopt(self, req: Request, payload: dict, now: float | None = None) -> bool:
         """Install a migrated request (cache shapes must match: same cfg,
         capacity-independent, same max_len)."""
+        if self.paged:
+            raise NotImplementedError(
+                "paged migration payloads are an open edge — see ROADMAP.md")
         now = time.perf_counter() if now is None else now
         row = self.pool.allocate(req.rid)
         if row is None:
@@ -489,13 +770,25 @@ class InferenceEngine:
         req.row, req.state = row, State.DECODE
         return True
 
+    def kv_utilization(self) -> float:
+        """KV memory in use as a fraction of the backend's budget: live
+        blocks over the pool on the paged backend (the per-block charge the
+        control plane trades in), occupied rows over capacity on dense."""
+        return self.prefix.utilization() if self.paged else self.pool.utilization()
+
     def kv_bytes(self, rid: int) -> int:
         """Migration payload size (drives the handoff cost model), scaled by
         the request's actual sequence length: leaves with a KV sequence axis
         are charged min(pos, L) of their L slots; per-row state without one
-        (SSM state / conv tails) is charged in full."""
+        (SSM state / conv tails) is charged in full.  On the paged backend a
+        request is charged its mapped blocks — per block, not per row."""
         rows = [r for r, q in self.row_req.items() if q.rid == rid]
         assert rows, f"rid {rid} not active here"
+        if self.paged:
+            per_block = sum(pool.nbytes // pool.shape[ax]
+                            for pool, ax in zip(jax.tree.leaves(self.caches),
+                                                self._pool_block_axes))
+            return per_block * len(self._row_blocks[rows[0]])
         n = int(self.pos[rows[0]])
         leaves = jax.tree.leaves(self.caches)
         total = 0

@@ -12,6 +12,12 @@ Two allocators:
   Pallas kernel (kernels/paged_attention); here we keep the allocator and the
   pure-jnp ops the kernel is validated against.  Allocator telemetry
   (utilization / fragmentation) feeds the control-plane profiler.
+
+The serving engine's paged backend allocates through
+``serving/prefix_cache.PrefixCache`` instead — the ref-counted superset of
+:class:`PagedAllocator` (block sharing, LRU-evictable cache retention,
+copy-on-write).  :class:`PagedAllocator` stays as the minimal non-shared
+control structure the kernel and property tests drive.
 """
 from __future__ import annotations
 
@@ -81,6 +87,9 @@ class PagedAllocator:
     def extend(self, rid: int, new_length: int) -> list[int] | None:
         """Grow a sequence; returns newly added blocks (may be empty), or
         None if out of memory (caller should evict/migrate)."""
+        if rid not in self.seqs:
+            raise ValueError(f"extend of unknown rid {rid}: allocate() it "
+                             f"first (live rids: {sorted(self.seqs)})")
         a = self.seqs[rid]
         need = self._need(new_length) - len(a.blocks)
         if need < 0:
@@ -134,22 +143,63 @@ class PagedKVCache:
         return self
 
 
-def paged_write(k_pool, v_pool, block_table, pos, k_new, v_new):
-    bs = k_pool.shape[1]
-    blk_idx = pos // bs
+def paged_write(k_pool, v_pool, block_table, pos, k_new, v_new, live=None):
+    """Scatter one token per row.  Rows whose table slot is -1 (no block
+    mapped at ``pos``) or whose ``live`` flag is False are exact no-ops:
+    their update is redirected out of bounds and dropped, never clamped
+    into block 0 (which belongs to some other sequence)."""
+    nb, bs = k_pool.shape[:2]
+    max_blk = block_table.shape[1]
+    blk_idx = jnp.clip(pos // bs, 0, max_blk - 1)
     blk = jnp.take_along_axis(block_table, blk_idx[:, None], axis=1)[:, 0]
+    ok = jnp.logical_and(blk >= 0, pos // bs < max_blk)
+    if live is not None:
+        ok = jnp.logical_and(ok, live)
+    blk = jnp.where(ok, blk, nb)                               # nb == OOB
     off = pos % bs
-    k_pool = k_pool.at[blk, off].set(k_new.astype(k_pool.dtype))
-    v_pool = v_pool.at[blk, off].set(v_new.astype(v_pool.dtype))
+    k_pool = k_pool.at[blk, off].set(k_new.astype(k_pool.dtype), mode="drop")
+    v_pool = v_pool.at[blk, off].set(v_new.astype(v_pool.dtype), mode="drop")
+    return k_pool, v_pool
+
+
+def paged_write_chunk(k_pool, v_pool, block_table, pos0, n_valid, k_new, v_new):
+    """Append a chunk of C tokens per row at absolute positions
+    pos0 .. pos0+n_valid-1 through the block table.
+
+    k/v_new: (B, C, KV, hd) right-padded chunk projections; pos0/n_valid
+    (B,) int32.  Rows with n_valid == 0 (idle pool rows riding along in the
+    batched chunk program) and pad positions are dropped, not clamped."""
+    nb, bs = k_pool.shape[:2]
+    B, C = k_new.shape[:2]
+    max_blk = block_table.shape[1]
+    pos = pos0[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]     # (B,C)
+    valid = jnp.arange(C, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    blk_idx = jnp.clip(pos // bs, 0, max_blk - 1)
+    blk = jnp.take_along_axis(block_table, blk_idx, axis=1)           # (B,C)
+    ok = valid & (blk >= 0) & (pos // bs < max_blk)
+    blk = jnp.where(ok, blk, nb).reshape(-1)
+    off = (pos % bs).reshape(-1)
+    kf = k_new.reshape(B * C, *k_new.shape[2:])
+    vf = v_new.reshape(B * C, *v_new.shape[2:])
+    k_pool = k_pool.at[blk, off].set(kf.astype(k_pool.dtype), mode="drop")
+    v_pool = v_pool.at[blk, off].set(vf.astype(v_pool.dtype), mode="drop")
     return k_pool, v_pool
 
 
 def paged_gather(pool, block_table, max_len: int):
     """(B, max_len, KV, hd) contiguous view gathered through block tables —
-    the pure-jnp oracle for the paged kernel."""
+    the pure-jnp oracle for the paged kernel.
+
+    ``max_len`` need not be a multiple of the block size: the block count is
+    rounded up and the ragged tail kept (a floor here silently dropped the
+    last ``max_len % bs`` tokens).  Slots beyond a sequence's mapped blocks
+    (table == -1) are masked to zero rather than aliasing block 0."""
     B, max_blk = block_table.shape
     bs = pool.shape[1]
-    n_blk = max_len // bs
-    bt = jnp.maximum(block_table[:, :n_blk], 0)                # (B, n_blk)
-    gathered = pool[bt]                                        # (B, n_blk, bs, KV, hd)
-    return gathered.reshape(B, n_blk * bs, *pool.shape[2:])
+    n_blk = min(-(-max_len // bs), max_blk)
+    tbl = block_table[:, :n_blk]                               # (B, n_blk)
+    gathered = pool[jnp.maximum(tbl, 0)]                       # (B, n_blk, bs, ...)
+    mask = (tbl >= 0).reshape(B, n_blk, *([1] * (pool.ndim - 1)))
+    gathered = jnp.where(mask, gathered, jnp.zeros((), pool.dtype))
+    out = gathered.reshape(B, n_blk * bs, *pool.shape[2:])
+    return out[:, :max_len]

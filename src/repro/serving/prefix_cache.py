@@ -1,0 +1,279 @@
+"""Block-level prefix caching over a paged KV pool.
+
+:class:`PrefixCache` owns every block of the paged KV pool and layers three
+mechanisms on top of a plain free list:
+
+* **Ref-counted sharing** — a block may back several live sequences at once
+  (all of them read the same prompt-prefix KV).  A block returns to the free
+  list only when its refcount reaches zero *and* it is not retained by the
+  cache index.
+* **Radix/trie prefix index** — full blocks form a radix tree whose edges
+  are ``(parent node, the block's own tokens)``, plus one partially-filled
+  *tail* block per node.  ``match`` walks edge-by-edge (each prompt token
+  hashed once, O(L)) and returns the longest cached prefix of a new
+  prompt; those tokens never get prefilled again.
+* **LRU eviction + copy-on-write** — unreferenced cached blocks sit in an
+  LRU; allocation reclaims them oldest-first, so the cache can use the whole
+  idle pool without ever blocking live traffic.  Matching a partial tail
+  hands a sequence a block it must not write (the cache — and possibly other
+  sequences — still read it); ``needs_cow`` tells the engine to copy it into
+  a private block before the first append.
+
+The engine charges KV memory per block through this class (``used_blocks`` /
+``utilization``), which is what the control plane's autoscaler and balancer
+consume instead of the dense per-row worst case.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+
+Key = tuple[int, ...]
+
+
+@dataclasses.dataclass
+class CachedBlock:
+    block: int
+    parent: int              # radix node the block extends (0 = root)
+    tokens: Key              # tokens stored in the block (len == bs if full)
+    node: int | None         # this block's radix node id; None for tails
+
+
+class PrefixCache:
+    """Ref-counted block allocator with a block-granularity prefix index."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks > 0 and block_size > 0
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: list[int] = list(range(num_blocks - 1, -1, -1))
+        self._ref: dict[int, int] = {}
+        # radix index over full blocks: edges are (parent node, block tokens)
+        # so a lookup hashes each token once, O(L) per walk — never the whole
+        # growing prefix per step.  One partial tail may hang off any node.
+        self._full: dict[tuple[int, Key], CachedBlock] = {}
+        self._tail: dict[int, CachedBlock] = {}    # node -> partial tail
+        self._entry: dict[int, CachedBlock] = {}   # cached block -> entry
+        self._next_node = 1                        # 0 is the root
+        self._lru: OrderedDict[int, None] = OrderedDict()  # ref==0 & cached
+        # telemetry (token-granularity, cumulative)
+        self.hit_tokens = 0
+        self.miss_tokens = 0
+        self.evictions = 0
+        self.cow_copies = 0
+        self.inserted_blocks = 0
+        # bumped whenever the index mutates; lets callers memoise lookups
+        self.generation = 0
+
+    # ------------------------------------------------------------- refcounts
+    def ref(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
+    def incref(self, block: int) -> None:
+        n = self._ref.get(block, 0)
+        if n == 0 and block in self._lru:      # referenced again: not evictable
+            del self._lru[block]
+        self._ref[block] = n + 1
+
+    def decref(self, block: int) -> None:
+        n = self._ref.get(block, 0)
+        if n <= 0:
+            raise ValueError(f"decref of unreferenced block {block}")
+        n -= 1
+        self._ref[block] = n
+        if n == 0:
+            del self._ref[block]
+            if block in self._entry:           # retained by the cache: evictable
+                self._lru[block] = None
+            else:
+                self._free.append(block)
+
+    # ------------------------------------------------------------ allocation
+    def allocate(self, n: int = 1) -> list[int] | None:
+        """n fresh blocks (refcount 1 each), evicting LRU cached blocks if the
+        free list runs dry.  None if even eviction cannot cover the request —
+        every block is referenced by a live sequence."""
+        if len(self._free) + len(self._lru) < n:
+            return None
+        out = []
+        for _ in range(n):
+            if not self._free:
+                self._evict_one()
+            b = self._free.pop()
+            self._ref[b] = 1
+            out.append(b)
+        return out
+
+    def _evict_one(self) -> None:
+        block, _ = self._lru.popitem(last=False)   # oldest first
+        self._uncache(block)
+        self._free.append(block)
+        self.evictions += 1
+        self.generation += 1
+
+    def _uncache(self, block: int) -> None:
+        e = self._entry.pop(block)
+        if e.node is not None:
+            if self._full.get((e.parent, e.tokens)) is e:
+                del self._full[(e.parent, e.tokens)]
+            # descendants keyed under e.node become unreachable; they stay
+            # refcounted/LRU-tracked and age out through normal eviction
+        elif self._tail.get(e.parent) is e:
+            del self._tail[e.parent]
+
+    # ---------------------------------------------------------------- lookup
+    def lookup(self, tokens: list[int]) -> int:
+        """Longest cached prefix length, in tokens, without taking refs.
+        Capped at len(tokens)-1: the last prompt token must always be
+        prefilled to produce first-token logits."""
+        return self._walk(tokens)[1]
+
+    def _walk(self, tokens: list[int]) -> tuple[list[int], int]:
+        bs = self.block_size
+        limit = len(tokens) - 1
+        blocks: list[int] = []
+        n, node = 0, 0
+        while n + bs <= limit:
+            e = self._full.get((node, tuple(tokens[n : n + bs])))
+            if e is None:
+                break
+            blocks.append(e.block)
+            node = e.node
+            n += bs
+        t = self._tail.get(node)
+        if t is not None and 0 < len(t.tokens) <= limit - n and \
+                tuple(tokens[n : n + len(t.tokens)]) == t.tokens:
+            blocks.append(t.block)
+            n += len(t.tokens)
+        return blocks, n
+
+    def match(self, tokens: list[int]) -> tuple[list[int], int]:
+        """Longest cached prefix of ``tokens``: (blocks, n_tokens).  Each
+        returned block is increfed (the caller owns one reference) and
+        touched in the LRU.  The last block may be a partial tail — the
+        caller must CoW it before writing (``needs_cow``)."""
+        blocks, n = self._walk(tokens)
+        for b in blocks:
+            # incref pulls the block out of the LRU; recency is re-stamped
+            # when the final decref re-appends it
+            self.incref(b)
+        self.hit_tokens += n
+        self.miss_tokens += max(len(tokens) - n, 0)
+        return blocks, n
+
+    # ---------------------------------------------------------------- insert
+    def insert(self, tokens: list[int], blocks: list[int], n_valid: int) -> int:
+        """Index a retiring sequence's blocks under its token prefix.
+
+        ``tokens``: the sequence's tokens whose KV is materialised (prompt +
+        generated-minus-last); ``blocks``: its block table; ``n_valid``: how
+        many leading tokens of ``tokens`` have KV written.  Blocks already
+        indexed (same key) are skipped — dedup keeps one block per prefix.
+        Returns the number of newly indexed blocks.  Does NOT change
+        refcounts: the caller still holds its per-sequence references and
+        releases them afterwards; cache retention is orthogonal to refs.
+        """
+        bs = self.block_size
+        n_valid = min(n_valid, len(tokens), len(blocks) * bs)
+        added = 0
+        nfull = n_valid // bs
+        node, chain_ok = 0, True
+        for i in range(nfull):
+            btoks = tuple(tokens[i * bs : (i + 1) * bs])
+            e = self._full.get((node, btoks))
+            if e is not None:                  # path already indexed: descend
+                node = e.node
+                continue
+            b = blocks[i]
+            if b in self._entry:               # indexed under another path —
+                chain_ok = False               # deeper nodes would be orphans
+                break
+            e = CachedBlock(b, node, btoks, node=self._next_node)
+            self._next_node += 1
+            self._full[(node, btoks)] = e
+            self._entry[b] = e
+            added += 1
+            node = e.node
+        # partial tail
+        rem = n_valid - nfull * bs
+        if chain_ok and rem > 0 and nfull < len(blocks):
+            btoks = tuple(tokens[nfull * bs : n_valid])
+            cur = self._tail.get(node)
+            b = blocks[nfull]
+            if (cur is None or len(cur.tokens) < len(btoks)) and b not in self._entry:
+                if cur is not None:
+                    self._drop_entry(cur.block)
+                e = CachedBlock(b, node, btoks, node=None)
+                self._tail[node] = e
+                self._entry[b] = e
+                added += 1
+        self.inserted_blocks += added
+        if added:
+            self.generation += 1
+        return added
+
+    def _drop_entry(self, block: int) -> None:
+        """Remove a block from the index; free it if unreferenced."""
+        self._uncache(block)
+        self.generation += 1
+        if block in self._lru:
+            del self._lru[block]
+            self._free.append(block)
+
+    # ------------------------------------------------------------------ misc
+    def needs_cow(self, block: int) -> bool:
+        """True if writing this block would corrupt another reader: it is
+        shared by other sequences or retained by the cache index."""
+        return self.ref(block) > 1 or block in self._entry
+
+    def release(self, blocks: list[int]) -> None:
+        for b in blocks:
+            self.decref(b)
+
+    # ------------------------------------------------------------- telemetry
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        """Blocks referenced by live sequences."""
+        return len(self._ref)
+
+    @property
+    def cached_blocks(self) -> int:
+        """Blocks retained by the prefix index (referenced or evictable)."""
+        return len(self._entry)
+
+    @property
+    def evictable_blocks(self) -> int:
+        return len(self._lru)
+
+    def utilization(self) -> float:
+        """Fraction of the pool holding live (referenced) blocks."""
+        return self.used_blocks / max(self.num_blocks, 1)
+
+    def hit_rate(self) -> float:
+        seen = self.hit_tokens + self.miss_tokens
+        return self.hit_tokens / seen if seen else 0.0
+
+    def check_invariants(self) -> None:
+        """Structural audit used by the property tests."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        for b in free:
+            assert self.ref(b) == 0 and b not in self._entry and b not in self._lru
+        for b, n in self._ref.items():
+            assert n > 0, f"non-positive refcount {n} for block {b}"
+            assert b not in free and b not in self._lru
+        for b in self._lru:
+            assert self.ref(b) == 0 and b in self._entry
+        for (pid, btoks), e in self._full.items():
+            assert self._entry.get(e.block) is e
+            assert e.parent == pid and e.tokens == btoks and e.node is not None
+        for pid, e in self._tail.items():
+            assert self._entry.get(e.block) is e
+            assert e.parent == pid and e.node is None
+        tracked = len(free) + len(self._ref) + len(self._lru)
+        assert tracked == self.num_blocks, (tracked, self.num_blocks)

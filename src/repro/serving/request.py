@@ -44,6 +44,7 @@ class Request:
     row: int | None = None                  # engine batch slot
     replica: int | None = None              # control-plane placement
     migrations: int = 0
+    prefix_hit_tokens: int = 0              # prompt tokens served from KV cache
 
     # ------------------------------------------------------------ metrics
     @property

@@ -31,10 +31,16 @@ class SchedulerConfig:
     max_prefill_per_step: int = 4
     prefill_token_budget: int | None = None  # per-step prefilled-token cap
     admission_timeout: float | None = None   # reject if queued longer (s)
+    # which token count the admission budget charges when the engine's cost
+    # callable reports (padded, true) separately: "padded" = compute tokens
+    # including bucket/chunk padding (what a step actually costs), "true" =
+    # prompt tokens only (what the request actually needs)
+    budget_counts: str = "padded"
 
 
 class Scheduler:
     def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
+        assert cfg.budget_counts in ("padded", "true"), cfg.budget_counts
         self.cfg = cfg
         self.queue: deque[Request] = deque()
         self.rejected = 0
@@ -67,8 +73,12 @@ class Scheduler:
         ``budget`` caps the summed per-request prefill cost (tokens the engine
         will prefill for the request *this step* — bucketed length for short
         prompts, one chunk for long ones); ``cost`` maps a request to that
-        number (default: prompt length).  The first pick is always admitted
-        even if it alone exceeds the budget, so admission always progresses.
+        number (default: prompt length), either a plain int or a
+        ``(padded, true)`` pair charged per ``cfg.budget_counts`` — padded
+        counts the compute the step really runs (bucket/chunk padding
+        included, prefix-cached tokens excluded), true counts prompt tokens.
+        The first pick is always admitted even if it alone exceeds the
+        budget, so admission always progresses.
         """
         # expire
         if self.cfg.admission_timeout is not None:
@@ -88,8 +98,11 @@ class Scheduler:
             picked = ordered[:n]
         else:
             picked, spent = [], 0
+            idx = 1 if self.cfg.budget_counts == "true" else 0
             for r in ordered[:n]:
                 c = cost(r) if cost is not None else len(r.prompt)
+                if isinstance(c, tuple):
+                    c = c[idx]
                 if picked and spent + c > budget:
                     break
                 picked.append(r)

@@ -92,6 +92,36 @@ def test_lb_round_robin_cycles():
     rs = [_R(0), _R(0), _R(0)]
     picks = [lb.pick(rs, load=lambda r: 0) for _ in range(6)]
     assert len(set(map(id, picks))) == 3
+    # unbiased: replica 0 gets the very first pick, strict rotation after
+    assert [rs.index(p) for p in picks] == [0, 1, 2, 0, 1, 2]
+
+
+def test_lb_round_robin_unbiased_after_resize():
+    """Shrinking the replica set must not skip anyone on the next pick."""
+    lb = LoadBalancer("rr")
+    rs = [_R(0) for _ in range(3)]
+    for _ in range(4):                       # counter now mid-rotation (1)
+        lb.pick(rs, load=lambda r: 0)
+    small = rs[:2]
+    picks = [small.index(lb.pick(small, load=lambda r: 0)) for _ in range(4)]
+    assert sorted(picks[:2]) == [0, 1] and sorted(picks[2:]) == [0, 1]
+
+
+def test_lb_prefix_affinity_sticky_and_load_guarded():
+    lb = LoadBalancer("prefix", affinity_slack=2.0)
+    rs = [_R(0), _R(0), _R(0)]
+    key = (1, 2, 3)
+    first = lb.pick(rs, load=lambda r: r._l, affinity_key=key)
+    # same key -> same replica, regardless of other keys routed in between
+    lb.pick(rs, load=lambda r: r._l, affinity_key=(9, 9))
+    assert lb.pick(rs, load=lambda r: r._l, affinity_key=key) is first
+    # overload spill: the affine replica beyond the slack loses the pick
+    first._l = 10.0
+    spilled = lb.pick(rs, load=lambda r: r._l, affinity_key=key)
+    assert spilled is not first
+    # ...and recovers stickiness once drained
+    first._l = 0.0
+    assert lb.pick(rs, load=lambda r: r._l, affinity_key=key) is first
 
 
 def test_lb_p2c_prefers_lower_load():

@@ -1,0 +1,190 @@
+"""Property tests: prefix-cache / block-allocator invariants and the
+paged-gather oracle (hypothesis-guarded like test_properties.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving.kv_cache import PagedAllocator, paged_gather, paged_write_chunk
+from repro.serving.prefix_cache import PrefixCache
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+# ------------------------------------------------------------ block space
+@settings(**SETTINGS)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 40),
+                          st.integers(0, 7)), min_size=1, max_size=60),
+       st.integers(4, 32), st.integers(2, 8))
+def test_prefix_cache_block_invariants(ops, num_blocks, bs):
+    """Random alloc / release / match / insert interleavings: refcounts never
+    go negative, no block is double-owned or double-freed, eviction never
+    reclaims a referenced block, and the pool never leaks."""
+    pc = PrefixCache(num_blocks, bs)
+    rng = np.random.default_rng(0)
+    live: dict[int, list[int]] = {}     # seq -> owned blocks
+    seqs: dict[int, list[int]] = {}     # seq -> tokens
+    sid = 0
+    for op, n, tok in ops:
+        if op == 0:                      # allocate a fresh sequence
+            got = pc.allocate(min(n, 6))
+            if got is not None:
+                assert len(set(got)) == len(got)
+                owned = [b for bl in live.values() for b in bl]
+                for b in got:
+                    # eviction may recycle cached blocks but never ones a
+                    # live sequence still references
+                    assert b not in owned, "evicted a referenced block"
+                live[sid] = got
+                seqs[sid] = [int(x) for x in
+                             rng.integers(0, 8, len(got) * bs)]
+                sid += 1
+        elif op == 1 and live:           # retire: insert + release
+            victim = next(iter(live))
+            blocks = live.pop(victim)
+            toks = seqs.pop(victim)
+            n_valid = min(len(toks), n * bs // 4 + 1)
+            pc.insert(toks, blocks, n_valid)
+            pc.release(blocks)
+        elif op == 2:                    # match a random prompt
+            prompt = [int(x) for x in rng.integers(0, 8, max(n, 2))]
+            blocks, hit = pc.match(prompt)
+            assert hit <= len(prompt) - 1
+            assert hit >= (len(blocks) - 1) * bs
+            live[sid] = blocks           # hold refs like an admitted row
+            seqs[sid] = prompt[:hit] if hit else []
+            sid += 1
+        elif op == 3 and live:           # plain release (no insert)
+            victim = next(iter(live))
+            pc.release(live.pop(victim))
+            del seqs[victim]
+        pc.check_invariants()
+    for s in list(live):
+        pc.release(live.pop(s))
+    pc.check_invariants()
+    # nothing referenced: the whole pool is free or evictable cache
+    assert pc.free_blocks + pc.evictable_blocks == num_blocks
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 8), st.integers(1, 60), st.integers(1, 20))
+def test_prefix_cache_match_roundtrip(bs, plen, extra):
+    """Insert a sequence then match it again: every full block (and the
+    partial tail) of the prompt is found, capped so the final token is
+    always recomputed."""
+    pc = PrefixCache(64, bs)
+    rng = np.random.default_rng(plen * 31 + bs)
+    toks = [int(x) for x in rng.integers(0, 50, plen)]
+    nblk = -(-plen // bs)
+    blocks = pc.allocate(nblk)
+    pc.insert(toks, blocks, plen)
+    pc.release(blocks)
+    got, hit = pc.match(list(toks) + [int(x) for x in
+                                      rng.integers(50, 60, extra)])
+    # the continuation diverges after plen, so the hit is exactly the
+    # indexed prefix (full blocks + tail), never more
+    assert hit == plen
+    assert len(got) == nblk
+    # matched blocks are referenced: a second allocation sweep cannot
+    # reclaim them
+    assert all(pc.ref(b) == 1 for b in got)
+    pc.release(got)
+    pc.check_invariants()
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 8), st.integers(2, 40))
+def test_prefix_cache_caps_full_prompt_hit(bs, plen):
+    """A prompt fully covered by the cache still recomputes >= 1 token."""
+    pc = PrefixCache(64, bs)
+    toks = list(range(plen))
+    blocks = pc.allocate(-(-plen // bs))
+    pc.insert(toks, blocks, plen)
+    pc.release(blocks)
+    got, hit = pc.match(list(toks))
+    assert hit <= plen - 1
+    pc.release(got)
+
+
+def test_prefix_cache_cow_flags():
+    pc = PrefixCache(8, 4)
+    (a,) = pc.allocate(1)
+    assert not pc.needs_cow(a)          # private, uncached
+    pc.incref(a)
+    assert pc.needs_cow(a)              # shared
+    pc.decref(a)
+    pc.insert([1, 2, 3], [a], 3)        # partial tail retained by the index
+    assert pc.needs_cow(a)
+    with pytest.raises(ValueError):
+        pc.decref(99)                   # unreferenced block: never goes < 0
+
+
+def test_paged_allocator_extend_unknown_rid():
+    a = PagedAllocator(8, 4)
+    with pytest.raises(ValueError, match="unknown rid"):
+        a.extend(123, 10)
+
+
+# ------------------------------------------------------------ paged gather
+@settings(**SETTINGS)
+@given(st.integers(1, 4), st.integers(2, 16), st.integers(1, 70),
+       st.integers(0, 2**31 - 1))
+def test_paged_gather_matches_dense_oracle(B, bs, max_len, seed):
+    """paged_gather == a literal per-token dense gather for arbitrary
+    lengths — including max_len not a multiple of the block size (the old
+    floor dropped the tail tokens)."""
+    rng = np.random.default_rng(seed)
+    KV, d = 2, 4
+    max_blk = -(-max_len // bs) + rng.integers(0, 3)
+    nb = B * max_blk + 1
+    pool = jnp.asarray(rng.normal(size=(nb, bs, KV, d)), jnp.float32)
+    lens = rng.integers(0, max_len + 1, B)
+    table = np.full((B, max_blk), -1, np.int32)
+    free = list(range(nb))
+    rng.shuffle(free)
+    for b in range(B):
+        for j in range(-(-int(lens[b]) // bs)):
+            table[b, j] = free.pop()
+    out = np.asarray(paged_gather(pool, jnp.asarray(table), max_len))
+    assert out.shape == (B, max_len, KV, d)
+    ref = np.zeros((B, max_len, KV, d), np.float32)
+    for b in range(B):
+        for t in range(max_len):
+            blk = table[b, t // bs]
+            if blk >= 0:
+                ref[b, t] = np.asarray(pool)[blk, t % bs]
+    np.testing.assert_array_equal(out, ref)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 3), st.integers(2, 8), st.integers(1, 12),
+       st.integers(0, 2**31 - 1))
+def test_paged_write_chunk_is_scatter_equivalent(B, bs, C, seed):
+    """The vectorised chunk append == a per-token scatter; idle rows and
+    pad positions are exact no-ops."""
+    rng = np.random.default_rng(seed)
+    KV, d = 1, 4
+    max_blk = 8
+    nb = B * max_blk
+    kp = jnp.asarray(rng.normal(size=(nb, bs, KV, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, KV, d)), jnp.float32)
+    table = np.full((B, max_blk), -1, np.int32)
+    pos0 = rng.integers(0, max_blk * bs - C, B).astype(np.int32)
+    nval = rng.integers(0, C + 1, B).astype(np.int32)
+    free = list(range(nb))
+    for b in range(B):
+        for j in range(-(-int(pos0[b] + nval[b]) // bs)):
+            table[b, j] = free.pop()
+    k = jnp.asarray(rng.normal(size=(B, C, KV, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, C, KV, d)), jnp.float32)
+    ok, ov = paged_write_chunk(kp, vp, jnp.asarray(table),
+                               jnp.asarray(pos0), jnp.asarray(nval), k, v)
+    ref_k = np.asarray(kp).copy()
+    for b in range(B):
+        for j in range(int(nval[b])):
+            p = int(pos0[b]) + j
+            ref_k[table[b, p // bs], p % bs] = np.asarray(k)[b, j]
+    np.testing.assert_array_equal(np.asarray(ok), ref_k)
