@@ -175,6 +175,106 @@ def run_paged(arch: str = "qwen2-0.5b-smoke", n_requests: int = 24,
     return results
 
 
+def run_migrate(arch: str = "qwen2-0.5b-smoke", n_requests: int = 20,
+                capacity: int = 8, block_size: int = 16,
+                verbose: bool = True) -> dict:
+    """Paged scale-down drain: live block-table migration vs. attrition.
+
+    Two paged replicas serve a decaying shared-prefix trace; once arrivals
+    stop, replica B is the scale-down victim.  With migration its live
+    requests hand their mapped blocks to A (destination-cached prefix
+    blocks are skipped — A served the same system prompt); without, B must
+    decode every request to completion before it can be reclaimed.  The
+    bench reports steps-to-empty for both policies — migration must win,
+    it moves O(blocks) bytes instead of running O(remaining tokens) of
+    decode — plus the transferred/skipped byte telemetry."""
+    from repro.core.migration import MigrationConfig, MigrationManager
+
+    cfg = get_config(arch)
+    results: dict = {}
+    for policy in ("attrition", "migration"):
+        rng = np.random.default_rng(2)
+        prompts = _shared_prefix_prompts(cfg, rng, n_requests)
+        # decaying arrivals: big burst first, trailing off to nothing
+        waves = []
+        i, w = 0, max(n_requests // 2, 1)
+        while i < n_requests:
+            waves.append(prompts[i:i + w])
+            i += w
+            w = max(w // 2, 1)
+
+        def mk():
+            return InferenceEngine(
+                cfg, capacity=capacity, max_len=96, buckets=(16, 32),
+                kv_backend="paged", block_size=block_size,
+                sched=SchedulerConfig(max_prefill_per_step=4))
+        a, b = mk(), mk()
+        b.params = a.params
+        _warm(a, cfg)
+        _warm(b, cfg)
+        mgr = MigrationManager(MigrationConfig())
+        rid = 0
+        for wi, wave in enumerate(waves):        # B takes the decaying tail
+            for j, p in enumerate(wave):
+                eng = b if (wi + j) % 2 else a
+                eng.submit(Request(rid=rid, prompt=list(p),
+                                   sampling=SamplingParams(max_new_tokens=24)))
+                rid += 1
+            # load decays: later (smaller) waves arrive after the earlier
+            # ones have mostly drained — the autoscaler's scale-down regime
+            for _ in range(6):
+                a.step()
+                b.step()
+        # arrivals over: B is the scale-down victim; hand its queue to A
+        while b.scheduler.queue:
+            a.submit(b.scheduler.queue.popleft())
+        b_tokens_predrain = sum(len(r.output) for r in b.finished)
+        drain_steps, t0 = 0, time.perf_counter()
+        while (b.pool.used or b.scheduler.depth()) and drain_steps < 2000:
+            if policy == "migration":
+                # the orchestrator's drain: move everything the survivor
+                # will admit, retry the rest next step
+                for r in [q.rid for q in b.migratable_requests()]:
+                    mgr.migrate(b, a, r, 0.0, 1, 0)
+            a.step()
+            b.step()
+            drain_steps += 1
+        drain_s = time.perf_counter() - t0
+        a.run(max_steps=3000)                   # A finishes what it absorbed
+        served = len(a.finished) + len(b.finished)
+        assert served == n_requests, f"{policy}: {served}/{n_requests} served"
+        res = {
+            "drain_steps": drain_steps,
+            "drain_s": drain_s,
+            "b_decode_tokens_during_drain": sum(
+                len(r.output) for r in b.finished) - b_tokens_predrain,
+            "migrated": mgr.succeeded,
+            "migration_failures": mgr.failed,
+            "bytes_transferred": sum(e.bytes for e in mgr.events),
+            "bytes_full": sum(e.bytes_full for e in mgr.events),
+            "blocks_skipped": sum(e.blocks_skipped for e in mgr.events),
+        }
+        a.prefix.check_invariants()
+        b.prefix.check_invariants()
+        results[policy] = res
+    mig, att = results["migration"], results["attrition"]
+    results["drain_speedup_steps"] = att["drain_steps"] / max(
+        mig["drain_steps"], 1)
+    if verbose:
+        for policy in ("attrition", "migration"):
+            print(f"--- {policy} drain ---")
+            for k, v in results[policy].items():
+                print(f"{k}: {v}")
+        print(f"drain speedup (attrition/migration steps): "
+              f"{results['drain_speedup_steps']:.2f}x")
+    assert mig["migrated"] > 0, "no request was live-migrated"
+    assert mig["drain_steps"] < att["drain_steps"], \
+        "live migration did not drain the victim faster than attrition"
+    assert mig["bytes_transferred"] <= mig["bytes_full"], \
+        "prefix skipping never reduced transfer bytes"
+    return results
+
+
 def run(arch: str = "qwen2-0.5b-smoke", n_requests: int = 24,
         capacity: int = 8, verbose: bool = True) -> dict:
     cfg = get_config(arch)
@@ -216,15 +316,18 @@ if __name__ == "__main__":
     import json
 
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--mode", choices=["pipeline", "paged"], default="pipeline",
+    ap.add_argument("--mode", choices=["pipeline", "paged", "migrate"],
+                    default="pipeline",
                     help="pipeline: batched/chunked prefill vs single-prefill; "
-                         "paged: paged+prefix-cache backend vs dense rows")
+                         "paged: paged+prefix-cache backend vs dense rows; "
+                         "migrate: paged scale-down drain, live block-table "
+                         "migration vs attrition")
     ap.add_argument("--n", type=int, default=24)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the result dict as JSON (CI artifact)")
     args = ap.parse_args()
-    res = (run_paged(n_requests=args.n) if args.mode == "paged"
-           else run(n_requests=args.n))
+    res = {"paged": run_paged, "migrate": run_migrate,
+           "pipeline": run}[args.mode](n_requests=args.n)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(res, f, indent=2, default=float)

@@ -2,10 +2,18 @@
 
 Separate engine pools for the compute-bound prefill phase and the
 memory-bound decode phase: a request is admitted to a prefill engine, runs
-exactly its prefill + first token there, then live-migrates (the Llumnix
-handoff from core/migration.py) to a decode engine.  Decode engines never
-run prefills, so running decodes are never stalled behind a long prompt —
-the TTFT/TPOT interference the paper's §2 calls out.
+its prefill there, then live-migrates (the Llumnix handoff from
+core/migration.py) to a decode engine.  Decode engines never run bucketed
+prefills, so running decodes are never stalled behind a long prompt — the
+TTFT/TPOT interference the paper's §2 calls out.
+
+Handoff point: short (single-chunk) prompts move right after their first
+token, as before.  Long chunked prompts move at the **last chunk
+boundary** — the payload carries the prefill progress, the decode engine
+runs the final (cheap) chunk, and the first token is sampled there, so the
+KV transfer starts one chunk earlier and prefill engines emit zero decode
+tokens for chunked requests.  Works on dense and paged replicas; paged
+handoffs skip blocks the destination's prefix cache already holds.
 """
 from __future__ import annotations
 
@@ -24,7 +32,18 @@ class DisaggConfig:
     prefill_engines: int = 1
     decode_engines: int = 1
     lb_policy: str = "least"
+    # hand chunked prompts off at their last chunk boundary instead of
+    # waiting for the first token (False restores first-token-only handoff)
+    chunk_handoff: bool = True
     migration: MigrationConfig = dataclasses.field(default_factory=MigrationConfig)
+
+
+@dataclasses.dataclass
+class DisaggStepStats:
+    t: float
+    handoffs_attempted: int = 0
+    handoffs_succeeded: int = 0
+    handoffs_failed: int = 0
 
 
 class DisaggregatedServer:
@@ -39,29 +58,49 @@ class DisaggregatedServer:
         self.balancer = LoadBalancer(cfg.lb_policy)
         self.migrations = MigrationManager(cfg.migration)
         self.finished: list[Request] = []
+        self.history: list[DisaggStepStats] = []
 
     def submit(self, req: Request, now: float | None = None) -> None:
         now = time.perf_counter() if now is None else now
         eng = self.balancer.pick(self.prefill_pool, load=lambda e: e.pending())
         eng.submit(req, now)
 
-    def step(self, now: float | None = None) -> None:
+    def _handoff_ready(self, pe: InferenceEngine) -> list[Request]:
+        """Requests a prefill engine should hand to the decode pool now:
+        everything that finished prefill (DECODE state), plus — with
+        chunk_handoff — mid-prefill rows at a chunk boundary whose
+        remaining prompt fits in one final chunk."""
+        out = [r for r in pe.row_req.values()
+               if r.state is State.DECODE and not r.done()]
+        if self.cfg.chunk_handoff:
+            for req in pe.migratable_requests():
+                if (req.state is State.PREFILL
+                        and len(req.prompt) - int(pe.pos[req.row]) <= pe.chunk):
+                    out.append(req)
+        return out
+
+    def step(self, now: float | None = None) -> DisaggStepStats:
         now = time.perf_counter() if now is None else now
-        # prefill engines admit + produce first tokens; anything in DECODE
-        # state there is immediately handed off to the decode pool
+        a0, s0 = self.migrations.attempted, self.migrations.succeeded
         for pi, pe in enumerate(self.prefill_pool):
             pe.step(now)
-            for req in list(pe.row_req.values()):
-                if req.state is not State.DECODE or req.done():
-                    continue
+            for req in self._handoff_ready(pe):
+                # KV pressure is the real decode-pool signal: occupied rows
+                # under-count on paged engines, whose cost is mapped blocks
                 dst = self.balancer.pick(self.decode_pool,
-                                         load=lambda e: e.pool.used)
+                                         load=lambda e: e.kv_utilization())
                 self.migrations.migrate(pe, dst, req.rid, now,
                                         src_idx=pi,
                                         dst_idx=len(self.prefill_pool)
                                         + self.decode_pool.index(dst))
         for de in self.decode_pool:
             de.step(now)
+        att = self.migrations.attempted - a0
+        ok = self.migrations.succeeded - s0
+        st = DisaggStepStats(t=now, handoffs_attempted=att,
+                             handoffs_succeeded=ok, handoffs_failed=att - ok)
+        self.history.append(st)
+        return st
 
     def pending(self) -> int:
         return sum(e.pending() for e in self.prefill_pool + self.decode_pool)

@@ -16,7 +16,7 @@ import dataclasses
 from typing import Sequence
 
 from repro.serving.engine import InferenceEngine
-from repro.serving.request import Request
+from repro.serving.request import Request, State
 
 
 @dataclasses.dataclass
@@ -34,14 +34,36 @@ class MigrationEvent:
     rid: int
     src: int
     dst: int
-    bytes: int
+    bytes: int                  # actually transferred (dst-cached blocks skipped)
     duration_s: float
+    bytes_full: int = 0         # the request's full KV footprint at the source
+    blocks_skipped: int = 0     # dst prefix-cache hits (paged only)
+    phase: str = "decode"       # "decode" | "prefill" (chunk-boundary handoff)
+
+
+@dataclasses.dataclass
+class MigrationFailure:
+    t: float
+    rid: int
+    src: int
+    dst: int
+    reason: str                 # "dst-full" | "requeued" | "backend-mismatch"
 
 
 class MigrationManager:
     def __init__(self, cfg: MigrationConfig = MigrationConfig()):
         self.cfg = cfg
         self.events: list[MigrationEvent] = []
+        self.failures: list[MigrationFailure] = []
+        self.attempted = 0
+
+    @property
+    def succeeded(self) -> int:
+        return len(self.events)
+
+    @property
+    def failed(self) -> int:
+        return len(self.failures)
 
     # ------------------------------------------------------------ decision
     def plan(self, occupancies: Sequence[float],
@@ -77,28 +99,85 @@ class MigrationManager:
         return nbytes / self.cfg.bandwidth_Bps + self.cfg.overhead_s
 
     # ------------------------------------------------------------ execution
+    def _fail(self, now: float, rid: int, src_idx: int, dst_idx: int,
+              reason: str) -> None:
+        self.failures.append(MigrationFailure(now, rid, src_idx, dst_idx, reason))
+
     def migrate(self, src: InferenceEngine, dst: InferenceEngine, rid: int,
                 now: float, src_idx: int = 0, dst_idx: int = 1) -> MigrationEvent | None:
-        """Real engine-to-engine handoff (same model config/max_len)."""
-        if getattr(src, "paged", False) or getattr(dst, "paged", False):
-            # paged migration payloads (block-table handoff) are an open
-            # edge — see ROADMAP.md; the control loop skips these replicas
+        """Real engine-to-engine handoff (same model config/max_len).
+
+        Paged replicas hand off their block table: the destination is probed
+        first, so blocks whose token content its prefix cache already holds
+        are never transferred — a prefix-cache-hot request moves fewer bytes
+        than its full KV footprint.  Payloads do not convert across KV
+        backends, so a dense<->paged pair is recorded as a failure and
+        skipped.
+
+        A destination refusal (no row / no admissible block plan) rolls the
+        request back into the source.  If the source *also* cannot re-admit
+        — its row or blocks were claimed meanwhile — the request is requeued
+        at the source scheduler from scratch rather than silently dropped
+        (on a paged source its prompt KV was donated to the prefix index at
+        extraction, so the re-prefill is mostly cache hits).  Every failure
+        is recorded in :attr:`failures` with a reason."""
+        self.attempted += 1
+        src_paged = getattr(src, "paged", False)
+        if src_paged != getattr(dst, "paged", False):
+            self._fail(now, rid, src_idx, dst_idx, "backend-mismatch")
             return None
-        nbytes = src.kv_bytes(rid)
+        _, live_req, _ = src._find_row(rid)
+        n_valid = len(src.migration_sequence(rid))
+        nbytes_full = src.kv_bytes(rid)
+        nbytes, skipped = nbytes_full, 0
+        if src_paged and getattr(dst, "prefix_enabled", False):
+            # probe the destination: aligned full blocks it already caches
+            # are reused there, not sent (adopt performs the same walk)
+            seq = src.migration_sequence(rid)
+            skipped = dst.prefix.lookup(seq) // dst.block_size
+            nbytes = nbytes_full - skipped * src.kv_per_block_bytes()
+        if not dst.can_adopt(live_req, n_valid, skipped):
+            # cheap refusal: no KV was gathered, nothing to roll back —
+            # a drain loop can retry every tick at O(1) cost
+            self._fail(now, rid, src_idx, dst_idx, "dst-full")
+            return None
         req, payload = src.extract_row(rid)
         if not dst.adopt(req, payload, now):
-            # destination full: roll back
-            assert src.adopt(req, payload, now), "rollback failed"
+            if src.adopt(req, payload, now):
+                self._fail(now, rid, src_idx, dst_idx, "dst-full")
+            else:
+                # the source can no longer re-admit either: requeue the
+                # request explicitly — a live request is never dropped.
+                # Appended directly: max_queue caps *new* arrivals, not a
+                # rolled-back request that was already being served
+                req.state = State.QUEUED
+                req.row = None
+                req.output.clear()
+                req.token_times.clear()
+                req.t_first_token = None
+                req.t_admit = None
+                src.scheduler.queue.append(req)
+                self._fail(now, rid, src_idx, dst_idx, "requeued")
             return None
         ev = MigrationEvent(now, rid, src_idx, dst_idx, nbytes,
-                            self.transfer_time(nbytes))
+                            self.transfer_time(nbytes), bytes_full=nbytes_full,
+                            blocks_skipped=skipped, phase=payload["phase"])
         self.events.append(ev)
         return ev
 
-    def pick_request(self, eng: InferenceEngine) -> int | None:
-        """Cheapest-to-move live request (smallest progress => smallest
-        dead time); ties by shortest remaining work."""
-        if not eng.row_req:
+    def pick_request(self, eng: InferenceEngine,
+                     include_prefill: bool = True) -> int | None:
+        """Cheapest-to-move live request — smallest materialised KV
+        (``pos``), so the handoff moves the least data and loses the least
+        progress if it fails.  Candidates come from
+        :meth:`InferenceEngine.migratable_requests`: decode rows plus, when
+        ``include_prefill``, chunk-boundary mid-prefill rows — the payload
+        carries the prefill progress, so adopting one resumes its remaining
+        prompt instead of truncating it into a bogus decode."""
+        cands = eng.migratable_requests()
+        if not include_prefill:
+            cands = [r for r in cands if r.state is State.DECODE]
+        if not cands:
             return None
-        req = min(eng.row_req.values(), key=lambda r: len(r.output))
+        req = min(cands, key=lambda r: int(eng.pos[r.row]))
         return req.rid

@@ -57,6 +57,8 @@ class Orchestrator:
         self.migrations = MigrationManager(cfg.migration)
         self._steps = 0
         self.scale_history: list[tuple[float, int]] = []
+        # requests that completed on replicas since retired by scale-down
+        self.finished: list[Request] = []
 
     def _spawn(self) -> InferenceEngine:
         """Create a replica with a stable monotonic identity: prefix-affinity
@@ -114,6 +116,8 @@ class Orchestrator:
                         self.engines[v].scheduler.depth() == 0:
                     removed.append(v)
             if removed:
+                for i in removed:      # a retired replica's served requests
+                    self.finished.extend(self.engines[i].finished)
                 self.engines = [e for i, e in enumerate(self.engines)
                                 if i not in removed]
                 self._cold = {}
@@ -129,13 +133,20 @@ class Orchestrator:
                                             rid, now, src, dst)
 
     def _drain(self, victim: int, keep: list[int], now: float) -> None:
+        """Move every live request off a scale-down victim: decode rows and
+        chunk-boundary mid-prefill rows alike (the payload carries prefill
+        progress), on dense and paged replicas (block-table handoff) — paged
+        scale-down drains actively instead of by attrition.  A row no target
+        can admit survives here and retries next control tick."""
         src = self.engines[victim]
-        for rid in [r.rid for r in list(src.row_req.values())]:
+        for rid in [r.rid for r in src.migratable_requests()]:
             for k in keep:
                 ev = self.migrations.migrate(src, self.engines[k], rid, now,
                                              victim, k)
                 if ev is not None:
                     break
+                if not any(r.rid == rid for r in src.migratable_requests()):
+                    break  # rollback requeued it; the loop below resubmits
         # requeue anything still queued
         while src.scheduler.queue:
             req = src.scheduler.queue.popleft()
@@ -172,7 +183,7 @@ class Orchestrator:
         while self.pending() and max_steps > 0:
             self.step()
             max_steps -= 1
-        out = []
+        out = list(self.finished)
         for e in self.engines:
             out.extend(e.finished)
         return out

@@ -724,50 +724,200 @@ class InferenceEngine:
         return self.finished
 
     # --------------------------------------------------------- migration
+    def _find_row(self, rid: int) -> tuple[int, Request, str]:
+        """Locate a live request by rid: (row, request, phase) where phase
+        is "decode" (prefill complete) or "prefill" (mid-chunked-prefill,
+        extractable at its current chunk boundary)."""
+        for row, q in self.row_req.items():
+            if q.rid == rid:
+                return row, q, "decode"
+        for row, q in self._prefilling.items():
+            if q.rid == rid:
+                return row, q, "prefill"
+        raise KeyError(f"rid {rid} not active here")
+
+    def migratable_requests(self) -> list[Request]:
+        """Live requests a migration payload can be built for: every decode
+        row, plus mid-prefill rows that have consumed at least one chunk
+        (a consumed==0 dense row has not run its cache reset yet — there is
+        nothing coherent to extract, only a request to requeue)."""
+        out = list(self.row_req.values())
+        out += [q for row, q in self._prefilling.items()
+                if self._consumed.get(row, 0) > 0]
+        return out
+
+    def migration_sequence(self, rid: int) -> list[int]:
+        """Tokens whose KV is materialised for this request — what a
+        destination's prefix cache can be probed with before transfer."""
+        row, req, _ = self._find_row(rid)
+        n = int(self.pos[row])
+        return (list(req.prompt) + list(req.output))[:n]
+
+    def can_adopt(self, req: Request, n_valid: int,
+                  n_keep_blocks: int = 0) -> bool:
+        """Cheap adopt admissibility probe — no row taken, no cache data
+        touched, no refcounts moved.  Lets the migration layer skip a
+        target without paying for a full extract/rollback round-trip.
+        ``n_keep_blocks``: full blocks this engine's prefix cache already
+        holds for the sequence (it would reuse, not re-allocate, them)."""
+        if self.pool.used >= self.capacity:
+            return False
+        if not self.paged:
+            return True
+        n_total = -(-n_valid // self.block_size)
+        future = self._blocks_horizon(req, n_total, False)
+        return (n_total - n_keep_blocks) + future <= self._paged_available()
+
+    def kv_per_block_bytes(self) -> int:
+        """Bytes one KV block holds across every layer pool (paged only)."""
+        assert self.paged
+        return sum(pool.nbytes // pool.shape[ax]
+                   for pool, ax in zip(jax.tree.leaves(self.caches),
+                                       self._pool_block_axes))
+
+    def _gather_blocks(self, block_ids: list[int]):
+        """Per-layer (n_blocks, block_size, ...) slabs for the given pool
+        blocks — the data plane of a paged migration payload."""
+        ids = jnp.asarray(block_ids, jnp.int32)
+        leaves = [jnp.take(pool, ids, axis=ax)
+                  for pool, ax in zip(jax.tree.leaves(self.caches),
+                                      self._pool_block_axes)]
+        return jax.tree.unflatten(jax.tree.structure(self.caches), leaves)
+
+    def _scatter_blocks(self, data, block_ids: list[int], lo: int) -> None:
+        """Write payload slabs (skipping the first ``lo`` blocks — the
+        destination already holds them) into the given fresh pool blocks."""
+        if not block_ids:
+            return
+        ids = jnp.asarray(block_ids, jnp.int32)
+        out = []
+        for pool, d, ax in zip(jax.tree.leaves(self.caches),
+                               jax.tree.leaves(data), self._pool_block_axes):
+            sl = jax.lax.slice_in_dim(d, lo, d.shape[ax], axis=ax)
+            idx = (slice(None),) * ax + (ids,)
+            out.append(pool.at[idx].set(sl.astype(pool.dtype)))
+        self.caches = jax.tree.unflatten(jax.tree.structure(self.caches), out)
+
     def extract_row(self, rid: int):
-        """Remove a mid-generation request, returning its migration payload
-        (request, row cache tree with batch dim 1, absolute pos, last token).
-        The row is freed (Llumnix-style pause-and-copy handoff)."""
+        """Remove a live request, returning its migration payload
+        (Llumnix-style pause-and-copy handoff).  Works for decode rows and
+        for mid-chunked-prefill rows at their current chunk boundary — the
+        payload carries the prefill progress (``phase``/``pos``) so the
+        destination resumes exactly where the source stopped.
+
+        Dense payload: the row's cache tree sliced to batch dim 1.  Paged
+        payload: per-layer (n_blocks, block_size, ...) slabs for the mapped
+        blocks plus the token sequence they hold, so the destination can
+        re-allocate through its own PrefixCache and skip blocks it already
+        caches.  The source row is freed; its blocks are donated to the
+        source's prefix index first, so a rollback re-adopt (or the next
+        request with this prefix) is mostly cache hits."""
+        row, req, phase = self._find_row(rid)
+        if phase == "prefill" and self._consumed.get(row, 0) <= 0:
+            raise ValueError(f"rid {rid} has not completed a chunk yet — "
+                             "requeue it instead of migrating")
+        n_valid = int(self.pos[row])
+        payload: dict[str, Any] = {"pos": n_valid, "phase": phase}
+        if phase == "decode":
+            payload["last_token"] = int(np.asarray(self.tokens)[row, 0])
         if self.paged:
-            raise NotImplementedError(
-                "paged migration payloads (block-table handoff) are an open "
-                "edge — see ROADMAP.md; migrate dense replicas only")
-        rows = [r for r, q in self.row_req.items() if q.rid == rid]
-        assert rows, f"rid {rid} not active here"
-        row = rows[0]
-        req = self.row_req.pop(row)
-        leaves = jax.tree.leaves(self.caches)
-        sliced = []
-        for pool, ax in zip(leaves, self._batch_axes):
-            sliced.append(jax.lax.dynamic_slice_in_dim(pool, row, 1, axis=ax))
-        payload = {
-            "caches": jax.tree.unflatten(jax.tree.structure(self.caches), sliced),
-            "pos": int(self.pos[row]),
-            "last_token": int(np.asarray(self.tokens)[row, 0]),
-        }
+            blocks = self._row_blocks[row][: -(-n_valid // self.block_size)]
+            payload["kind"] = "paged"
+            payload["seq"] = self.migration_sequence(rid)
+            payload["blocks"] = self._gather_blocks(blocks)
+            payload["n_blocks"] = len(blocks)
+        else:
+            leaves = jax.tree.leaves(self.caches)
+            sliced = [jax.lax.dynamic_slice_in_dim(pool, row, 1, axis=ax)
+                      for pool, ax in zip(leaves, self._batch_axes)]
+            payload["kind"] = "dense"
+            payload["caches"] = jax.tree.unflatten(
+                jax.tree.structure(self.caches), sliced)
+        if phase == "decode":
+            del self.row_req[row]
+        else:
+            del self._prefilling[row]
+            del self._consumed[row]
+            self._fresh.discard(row)
+        if self.paged:
+            self._release_row(row, req, insert=True)
         req.state = State.MIGRATING
         req.row = None
         req.migrations += 1
         self.pool.free(row)
         return req, payload
 
+    def _adopt_paged(self, req: Request, payload: dict, row: int) -> bool:
+        """Install a paged payload: re-allocate blocks through the prefix
+        cache (destination-cached full blocks are reused, not rewritten),
+        scatter the transferred slabs, re-link the block table, and donate
+        the request's full blocks into the radix index so subsequent
+        prompts hit them.  Reservation-based admission mirrors
+        ``_admit_paged`` — an adopt that fits now can always grow to the
+        request's peak length without deadlocking the pool."""
+        seq, n_valid = payload["seq"], payload["pos"]
+        n_total = -(-n_valid // self.block_size)
+        future = self._blocks_horizon(req, n_total, False)
+        if self.prefix_enabled:
+            plan = self.prefix.adopt_blocks(seq, n_valid, future,
+                                            self._reserved_total)
+        else:
+            plan = None
+            if n_total + future <= self._paged_available():
+                got = self.prefix.allocate(n_total)
+                plan = (got, 0) if got is not None else None
+        if plan is None:
+            return False
+        blocks, n_keep = plan
+        self._scatter_blocks(payload["blocks"], blocks[n_keep:], n_keep)
+        self._row_blocks[row] = blocks
+        self.block_tables[row, :] = -1
+        self.block_tables[row, : len(blocks)] = blocks
+        self._row_reserved[row] = future
+        self._reserved_total += future
+        if self.prefix_enabled:
+            # donate the transferred *full* blocks (their positions are
+            # immutable now) — the partial tail stays private so this row's
+            # own appends never trigger a copy-on-write
+            self.prefix.insert(seq, blocks, (n_valid // self.block_size)
+                               * self.block_size)
+        req.extras["adopt_hit_blocks"] = n_keep
+        return True
+
     def adopt(self, req: Request, payload: dict, now: float | None = None) -> bool:
         """Install a migrated request (cache shapes must match: same cfg,
-        capacity-independent, same max_len)."""
-        if self.paged:
-            raise NotImplementedError(
-                "paged migration payloads are an open edge — see ROADMAP.md")
+        capacity-independent, same max_len/block_size; payloads do not
+        convert across KV backends).  Returns False — leaving this engine
+        untouched — when no row or, on the paged backend, no admissible
+        block plan is available."""
+        kind = payload.get("kind", "dense")
+        want = "paged" if self.paged else "dense"
+        if kind != want:
+            raise ValueError(f"cannot adopt a {kind!r} payload on a {want!r} "
+                             "engine — migrate between same-backend replicas")
         now = time.perf_counter() if now is None else now
         row = self.pool.allocate(req.rid)
         if row is None:
             return False
-        self.caches = self._insert(self.caches, payload["caches"],
-                                   jnp.asarray([row], jnp.int32))
+        if self.paged:
+            if not self._adopt_paged(req, payload, row):
+                self.pool.free(row)
+                return False
+        else:
+            self.caches = self._insert(self.caches, payload["caches"],
+                                       jnp.asarray([row], jnp.int32))
         self.pos[row] = payload["pos"]
-        self.tokens = self.tokens.at[row, 0].set(payload["last_token"])
         self._set_row_sampling(row, req)
-        self.row_req[row] = req
-        req.row, req.state = row, State.DECODE
+        req.row = row
+        if payload["phase"] == "decode":
+            self.tokens = self.tokens.at[row, 0].set(payload["last_token"])
+            self.row_req[row] = req
+            req.state = State.DECODE
+        else:
+            # mid-prefill handoff: resume the chunk pipeline at the boundary
+            self._prefilling[row] = req
+            self._consumed[row] = payload["pos"]
+            req.state = State.PREFILL
         return True
 
     def kv_utilization(self) -> float:
@@ -782,14 +932,10 @@ class InferenceEngine:
         are charged min(pos, L) of their L slots; per-row state without one
         (SSM state / conv tails) is charged in full.  On the paged backend a
         request is charged its mapped blocks — per block, not per row."""
-        rows = [r for r, q in self.row_req.items() if q.rid == rid]
-        assert rows, f"rid {rid} not active here"
+        row, _, _ = self._find_row(rid)
         if self.paged:
-            per_block = sum(pool.nbytes // pool.shape[ax]
-                            for pool, ax in zip(jax.tree.leaves(self.caches),
-                                                self._pool_block_axes))
-            return per_block * len(self._row_blocks[rows[0]])
-        n = int(self.pos[rows[0]])
+            return self.kv_per_block_bytes() * len(self._row_blocks[row])
+        n = int(self.pos[row])
         leaves = jax.tree.leaves(self.caches)
         total = 0
         for pool, ax, L in zip(leaves, self._batch_axes, self._seq_lens):

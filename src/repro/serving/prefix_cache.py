@@ -258,6 +258,53 @@ class PrefixCache:
         seen = self.hit_tokens + self.miss_tokens
         return self.hit_tokens / seen if seen else 0.0
 
+    def adopt_blocks(self, seq: list[int], n_valid: int,
+                     extra_horizon: int = 0,
+                     reserved: int = 0) -> tuple[list[int], int] | None:
+        """Destination-side block plan for a migrated sequence whose KV
+        covers positions ``[0, n_valid)``.
+
+        Full blocks whose token content this cache already indexes are
+        *reused* (read-shared, never re-transferred); the rest are freshly
+        allocated for the sender's payload to land in.  Admission is
+        reservation-aware: the plan is refused — with the speculative match
+        fully rolled back, so a refused adopt leaves the cache untouched —
+        unless the fresh blocks *plus* ``extra_horizon`` (blocks the adopted
+        request may still grow into) fit what live rows have not already
+        reserved (``reserved``).  Hit/miss telemetry is neutralised: a
+        migration is a transfer, not a served prompt.
+
+        Returns ``(blocks, n_keep)`` — the full position-aligned block list
+        (blocks[:n_keep] reused, blocks[n_keep:] fresh, refcount held on
+        all) — or ``None`` when the pool cannot admit the request.
+        """
+        bs = self.block_size
+        n_total = -(-n_valid // bs)
+        hit_blocks: list[int] = []
+        n_hit = 0
+        if seq:
+            hit_blocks, n_hit = self.match(seq)
+            # neutralise the counters match() bumped
+            self.hit_tokens -= n_hit
+            self.miss_tokens -= max(len(seq) - n_hit, 0)
+            if n_hit % bs:
+                # only aligned full blocks can stand in for transferred
+                # ones — a partial tail is dropped, not fast-forwarded
+                self.decref(hit_blocks.pop())
+                n_hit -= n_hit % bs
+        n_keep = min(n_hit // bs, len(hit_blocks))
+        del hit_blocks[n_keep:]
+        fresh_needed = n_total - n_keep
+        if (fresh_needed + extra_horizon
+                > self.free_blocks + self.evictable_blocks - reserved):
+            self.release(hit_blocks)
+            return None
+        fresh = self.allocate(fresh_needed) if fresh_needed else []
+        if fresh is None:                      # unreachable given the check
+            self.release(hit_blocks)
+            return None
+        return hit_blocks + fresh, n_keep
+
     def check_invariants(self) -> None:
         """Structural audit used by the property tests."""
         free = set(self._free)

@@ -131,6 +131,39 @@ def test_migration_preserves_generation(rng):
     assert done[0].migrations == 1
 
 
+def test_migration_at_chunk_boundary_preserves_generation(rng):
+    """A mid-chunked-prefill request migrated at a chunk boundary resumes
+    its remaining prompt on the destination (the payload carries prefill
+    progress — no truncation into a bogus decode) and produces greedy
+    output identical to an unmigrated run."""
+    from repro.core.migration import MigrationManager
+    cfg, eng_a = _mk_engine(seed=3, max_len=96)
+    _, eng_b = _mk_engine(seed=3, max_len=96)
+    eng_b.params = eng_a.params
+    prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 40)]  # chunked
+    ref_eng = _mk_engine(seed=3, max_len=96)[1]
+    ref_eng.params = eng_a.params
+    ref_eng.submit(Request(rid=0, prompt=list(prompt),
+                           sampling=SamplingParams(max_new_tokens=6)))
+    ref = ref_eng.run(max_steps=100)[0].output
+
+    req = Request(rid=0, prompt=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=6))
+    eng_a.submit(req)
+    eng_a.step()                              # first chunk only
+    assert req.state.name == "PREFILL" and len(req.output) == 0
+    mgr = MigrationManager()
+    rid = mgr.pick_request(eng_a)
+    assert rid == 0                           # mid-prefill rows are candidates
+    ev = mgr.migrate(eng_a, eng_b, rid, now=0.0)
+    assert ev is not None and ev.phase == "prefill"
+    done = eng_b.run(max_steps=100)
+    assert done[0].output == ref
+    assert done[0].migrations == 1
+    # restricting to completed-prefill candidates is still available
+    assert mgr.pick_request(eng_a, include_prefill=False) is None
+
+
 def test_staged_pipeline_matches_monolithic(rng):
     """Microservice decomposition: stage-partitioned decode == monolithic."""
     from repro.core.microservice import StagePipeline

@@ -151,22 +151,167 @@ def test_paged_backend_is_per_config(rng):
     assert len(eng.run(max_steps=60)) == 1
 
 
-def test_paged_migration_is_guarded(rng):
-    """Paged block-table handoff is an open edge: the migration layer skips
-    paged replicas instead of corrupting them."""
+def test_paged_migration_preserves_generation(rng):
+    """Block-table handoff between paged replicas: a request migrated
+    mid-decode produces bit-identical greedy output to an unmigrated run,
+    and both engines' block spaces stay invariant-clean."""
     from repro.core.migration import MigrationManager
     cfg, eng_a = _mk("paged")
     _, eng_b = _mk("paged")
     eng_b.params = eng_a.params
-    eng_a.submit(Request(rid=0,
-                         prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, 9)],
+    prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 20)]
+    ref_eng = _mk("paged")[1]
+    ref_eng.params = eng_a.params
+    ref_eng.submit(Request(rid=0, prompt=list(prompt),
+                           sampling=SamplingParams(max_new_tokens=8)))
+    ref = ref_eng.run(max_steps=100)[0].output
+
+    req = Request(rid=0, prompt=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=8))
+    eng_a.submit(req)
+    for _ in range(5):                 # chunked prefill + a few decode steps
+        eng_a.step()
+    assert req.state.name == "DECODE" and len(req.output) >= 2
+    mgr = MigrationManager()
+    ev = mgr.migrate(eng_a, eng_b, rid=0, now=0.0)
+    assert ev is not None and ev.bytes > 0 and ev.phase == "decode"
+    done = eng_b.run(max_steps=100)
+    assert done[0].output == ref
+    assert done[0].migrations == 1
+    eng_a.prefix.check_invariants()
+    eng_b.prefix.check_invariants()
+
+
+def test_paged_migration_skips_destination_cached_blocks(rng):
+    """Cross-replica prefix handoff: migrating a request whose prompt the
+    destination already caches transfers fewer bytes than its full
+    kv_bytes, and the transferred blocks are donated into the destination
+    index so a subsequent identical prompt hits them."""
+    from repro.core.migration import MigrationManager
+    cfg, eng_a = _mk("paged")
+    _, eng_b = _mk("paged")
+    eng_b.params = eng_a.params
+    prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 20)]
+    # warm the destination's prefix cache with the same prompt
+    eng_b.submit(Request(rid=9, prompt=list(prompt),
+                         sampling=SamplingParams(max_new_tokens=2)))
+    ref = eng_b.run(max_steps=60)[0]
+    eng_b.finished.clear()
+
+    req = Request(rid=0, prompt=list(prompt),
+                  sampling=SamplingParams(max_new_tokens=8))
+    eng_a.submit(req)
+    for _ in range(4):
+        eng_a.step()
+    full = eng_a.kv_bytes(0)
+    ev = MigrationManager().migrate(eng_a, eng_b, rid=0, now=0.0)
+    assert ev is not None
+    assert ev.blocks_skipped > 0
+    assert ev.bytes < full == ev.bytes_full, "dst-cached blocks still shipped"
+    done = eng_b.run(max_steps=100)[0]
+    assert done.output[:2] == ref.output    # same greedy continuation
+    # donation: a fresh identical prompt now hits the migrated blocks too
+    eng_b.finished.clear()
+    eng_b.submit(Request(rid=1, prompt=list(prompt),
+                         sampling=SamplingParams(max_new_tokens=2)))
+    got = eng_b.run(max_steps=60)[0]
+    assert got.prefix_hit_tokens > 0
+    eng_b.prefix.check_invariants()
+
+
+def test_paged_migration_rollback_and_requeue(rng, monkeypatch):
+    """A refused handoff rolls back into the source; if the source cannot
+    re-admit either, the request is explicitly requeued at the source
+    scheduler (never silently dropped) and the failure is recorded."""
+    from repro.core.migration import MigrationManager
+    cfg, eng_a = _mk("paged", capacity=1)
+    _, eng_b = _mk("paged", capacity=1)
+    eng_b.params = eng_a.params
+    pa = [int(x) for x in rng.integers(0, cfg.vocab_size, 10)]
+    eng_a.submit(Request(rid=0, prompt=list(pa),
+                         sampling=SamplingParams(max_new_tokens=8)))
+    eng_b.submit(Request(rid=1,
+                         prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, 10)],
                          sampling=SamplingParams(max_new_tokens=8)))
     for _ in range(3):
         eng_a.step()
-    assert MigrationManager().migrate(eng_a, eng_b, rid=0, now=0.0) is None
-    with pytest.raises(NotImplementedError):
-        eng_a.extract_row(0)
-    assert len(eng_a.run(max_steps=60)) == 1      # request unharmed
+        eng_b.step()
+    ref_eng = _mk("paged", capacity=1)[1]
+    ref_eng.params = eng_a.params
+    ref_eng.submit(Request(rid=5, prompt=list(pa),
+                           sampling=SamplingParams(max_new_tokens=8)))
+    ref = ref_eng.run(max_steps=100)[0].output
+
+    # destination full -> rollback into the source, generation unharmed
+    mgr = MigrationManager()
+    assert mgr.migrate(eng_a, eng_b, rid=0, now=0.0) is None
+    assert mgr.failures[-1].reason == "dst-full"
+    assert eng_a.run(max_steps=100)[0].output == ref
+    eng_a.finished.clear()
+
+    # source cannot re-admit either -> explicit requeue, still served.
+    # eng_b is drained first so the cheap probe passes and the handoff
+    # reaches the adopt stage, where both engines are forced to refuse.
+    eng_b.run(max_steps=100)
+    eng_a.submit(Request(rid=0, prompt=list(pa),
+                         sampling=SamplingParams(max_new_tokens=8)))
+    for _ in range(3):
+        eng_a.step()
+    real_adopt = eng_a.adopt
+    monkeypatch.setattr(eng_a, "adopt",
+                        lambda req, payload, now=None: False)
+    monkeypatch.setattr(eng_b, "adopt",
+                        lambda req, payload, now=None: False)
+    assert mgr.migrate(eng_a, eng_b, rid=0, now=0.0) is None
+    assert mgr.failures[-1].reason == "requeued"
+    assert eng_a.scheduler.depth() == 1       # back in the source queue
+    monkeypatch.setattr(eng_a, "adopt", real_adopt)
+    done = eng_a.run(max_steps=100)
+    assert len(done) == 1 and done[0].output == ref
+    eng_a.prefix.check_invariants()
+
+
+def test_paged_disaggregation_hands_off_every_request(rng):
+    """A paged DisaggregatedServer moves every request to the decode pool:
+    multi-chunk prompts at their last chunk boundary (zero decode tokens on
+    prefill engines), outputs identical to a monolithic paged serve, and
+    handoff telemetry exposed per step."""
+    from repro.core.disaggregation import DisaggConfig, DisaggregatedServer
+    cfg = get_config(ARCH)
+
+    def mk():
+        return InferenceEngine(cfg, capacity=4, max_len=96, buckets=(8, 16),
+                               kv_backend="paged", block_size=8, seed=21)
+
+    rng_p = np.random.default_rng(3)
+    prompts = [[int(x) for x in rng_p.integers(0, cfg.vocab_size, n)]
+               for n in (40, 25, 33, 29)]           # all multi-chunk
+    ref_eng = mk()
+    for i, p in enumerate(prompts):
+        ref_eng.submit(Request(rid=i, prompt=list(p),
+                               sampling=SamplingParams(max_new_tokens=6)))
+    ref = {r.rid: r.output for r in ref_eng.run(max_steps=300)}
+
+    srv = DisaggregatedServer(mk, DisaggConfig(prefill_engines=1,
+                                               decode_engines=2))
+    srv.prefill_pool[0].params = ref_eng.params
+    for e in srv.decode_pool:
+        e.params = ref_eng.params
+    for i, p in enumerate(prompts):
+        srv.submit(Request(rid=i, prompt=list(p),
+                           sampling=SamplingParams(max_new_tokens=6)))
+    done = srv.run(max_steps=400)
+    assert {r.rid: r.output for r in done} == ref
+    assert all(r.migrations == 1 for r in done)
+    assert all(e.phase == "prefill" for e in srv.migrations.events), \
+        "multi-chunk prompts should hand off at a chunk boundary"
+    # prefill engines never ran a decode step after (or before) handoff
+    assert sum(s.tokens_out for pe in srv.prefill_pool
+               for s in pe.history) == 0
+    assert sum(s.handoffs_succeeded for s in srv.history) == len(prompts)
+    assert sum(s.handoffs_failed for s in srv.history) == 0
+    for e in srv.prefill_pool + srv.decode_pool:
+        e.prefix.check_invariants()
 
 
 def test_orchestrator_paged_prefix_affinity(rng):

@@ -16,19 +16,48 @@ SETTINGS = dict(max_examples=40, deadline=None)
 
 # ------------------------------------------------------------ block space
 @settings(**SETTINGS)
-@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 40),
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(1, 40),
                           st.integers(0, 7)), min_size=1, max_size=60),
        st.integers(4, 32), st.integers(2, 8))
 def test_prefix_cache_block_invariants(ops, num_blocks, bs):
-    """Random alloc / release / match / insert interleavings: refcounts never
-    go negative, no block is double-owned or double-freed, eviction never
-    reclaims a referenced block, and the pool never leaks."""
+    """Random alloc / release / match / insert / adopt interleavings:
+    refcounts never go negative, no block is double-owned, double-freed or
+    double-mapped within a row, eviction never reclaims a referenced block,
+    and the pool never leaks — including through the migration adopt path
+    (``adopt_blocks``), whose refusal must leave the cache untouched."""
     pc = PrefixCache(num_blocks, bs)
     rng = np.random.default_rng(0)
     live: dict[int, list[int]] = {}     # seq -> owned blocks
     seqs: dict[int, list[int]] = {}     # seq -> tokens
     sid = 0
     for op, n, tok in ops:
+        if op == 4:                      # adopt a migrated sequence
+            n_valid = min(n, 4 * bs - 1)
+            seq = [int(x) for x in rng.integers(0, 8, n_valid)]
+            before = (pc.free_blocks, pc.evictable_blocks,
+                      pc.hit_tokens, pc.miss_tokens)
+            plan = pc.adopt_blocks(seq, n_valid, extra_horizon=tok % 3)
+            if plan is None:
+                # a refused adopt is side-effect free
+                assert before == (pc.free_blocks, pc.evictable_blocks,
+                                  pc.hit_tokens, pc.miss_tokens)
+            else:
+                blocks, n_keep = plan
+                assert len(blocks) == -(-n_valid // bs)
+                assert 0 <= n_keep < len(blocks), \
+                    "the tail block must always be transferred"
+                assert len(set(blocks)) == len(blocks), "double-mapped row"
+                assert all(pc.ref(b) > 0 for b in blocks)
+                # fresh blocks are private until this row shares them
+                assert all(pc.ref(b) == 1 for b in blocks[n_keep:])
+                assert (pc.hit_tokens, pc.miss_tokens) == before[2:], \
+                    "adopt must not count as served-prompt hit/miss"
+                pc.insert(seq, blocks, (n_valid // bs) * bs)  # donation
+                live[sid] = blocks
+                seqs[sid] = seq
+                sid += 1
+            pc.check_invariants()
+            continue
         if op == 0:                      # allocate a fresh sequence
             got = pc.allocate(min(n, 6))
             if got is not None:
