@@ -1,0 +1,127 @@
+"""Bench-regression CI gate.
+
+Compares a fresh bench JSON (``engine_bench.py --json``) against the
+committed baseline under ``benchmarks/baselines/`` and fails (exit != 0)
+when any gated metric regresses beyond its tolerance.  The gated metrics
+are deliberately the *deterministic* ones — token counts, hit rates, block
+peaks, drain steps — which are bit-reproducible for a pinned ``--seed``;
+wall-clock numbers (tokens/s, TTFT seconds) are excluded because shared CI
+runners make them meaningless to gate on.
+
+Tolerances are per metric: ``rel`` is the allowed relative regression
+(0.10 = a >=10% regression fails), ``abs_slack`` is an additional absolute
+allowance for small integer counts where one unit is a large fraction
+(e.g. drain_steps with a baseline of 1).  Improvements never fail.
+
+Re-baselining (intentional changes only): re-run the bench with the CI
+seed and overwrite the baseline file, e.g.
+
+    PYTHONPATH=src python benchmarks/engine_bench.py --mode directory \
+        --seed 0 --json benchmarks/baselines/BENCH_directory.json
+
+and say why in the commit message.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
+
+#: metric path -> (higher_is_better, rel tolerance, absolute slack).
+#: Paths index nested dicts with '.'.
+GATES: dict[str, dict[str, tuple[bool, float, float]]] = {
+    "paged": {
+        "paged.prefix_hit_rate": (True, 0.10, 0.0),
+        "prefill_saved_frac": (True, 0.10, 0.0),
+        "paged.prefill_tokens_true": (False, 0.10, 0.0),
+        "paged.kv_blocks_peak": (False, 0.15, 1.0),
+        "paged.finished": (True, 0.0, 0.0),
+    },
+    "migrate": {
+        "drain_speedup_steps": (True, 0.25, 0.0),
+        "migration.drain_steps": (False, 0.10, 1.0),
+        "migration.migrated": (True, 0.0, 1.0),
+        "migration.bytes_transferred": (False, 0.25, 0.0),
+    },
+    "directory": {
+        "directory.cluster_hit_rate": (True, 0.10, 0.0),
+        "directory.prefill_tokens_true": (False, 0.10, 0.0),
+        "hit_rate_gain_vs_prefix": (True, 0.50, 0.0),
+        "prefill_saved_vs_prefix": (True, 0.50, 0.0),
+        "directory.mean_ttft_steps": (False, 0.25, 0.5),
+    },
+}
+
+
+def _dig(d: dict, path: str):
+    cur = d
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def compare(bench: str, fresh: dict, baseline: dict) -> list[str]:
+    """Failure messages for every gated metric of ``bench`` that regressed
+    (empty list = gate passes).  A metric missing from either file is a
+    failure: silently dropping a gated metric is itself a regression."""
+    failures = []
+    for path, (higher, rel, slack) in GATES[bench].items():
+        base = _dig(baseline, path)
+        new = _dig(fresh, path)
+        if base is None or new is None:
+            failures.append(f"{path}: missing (baseline={base}, fresh={new})")
+            continue
+        base, new = float(base), float(new)
+        if higher:
+            floor = base * (1.0 - rel) - slack
+            if new < floor:
+                failures.append(
+                    f"{path}: {new:.6g} < allowed {floor:.6g} "
+                    f"(baseline {base:.6g}, rel {rel:.0%}, slack {slack:g})")
+        else:
+            ceil = base * (1.0 + rel) + slack
+            if new > ceil:
+                failures.append(
+                    f"{path}: {new:.6g} > allowed {ceil:.6g} "
+                    f"(baseline {base:.6g}, rel {rel:.0%}, slack {slack:g})")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", choices=sorted(GATES), required=True)
+    ap.add_argument("--fresh", required=True, metavar="PATH",
+                    help="metrics JSON from the fresh CI bench run")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="baseline JSON (default: "
+                         "benchmarks/baselines/BENCH_<bench>.json)")
+    args = ap.parse_args(argv)
+    baseline_path = pathlib.Path(args.baseline) if args.baseline else \
+        BASELINE_DIR / f"BENCH_{args.bench}.json"
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    failures = compare(args.bench, fresh, baseline)
+    n = len(GATES[args.bench])
+    if failures:
+        print(f"REGRESSION GATE FAILED [{args.bench}] — "
+              f"{len(failures)}/{n} metrics out of tolerance "
+              f"(baseline {baseline_path}):")
+        for msg in failures:
+            print(f"  {msg}")
+        print("If the change is an intentional trade-off, re-baseline "
+              "(see module docstring) and justify it in the commit.")
+        return 1
+    print(f"regression gate passed [{args.bench}]: {n} metrics within "
+          f"tolerance of {baseline_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,10 +32,10 @@ def _burst_prompts(cfg, rng, n: int, long_every: int = 5) -> list[list[int]]:
     return prompts
 
 
-def _mk_engine(cfg, mpps: int, capacity: int) -> InferenceEngine:
+def _mk_engine(cfg, mpps: int, capacity: int, seed: int = 0) -> InferenceEngine:
     return InferenceEngine(
         cfg, capacity=capacity, max_len=96, buckets=(16, 32),
-        sched=SchedulerConfig(max_prefill_per_step=mpps))
+        sched=SchedulerConfig(max_prefill_per_step=mpps), seed=seed)
 
 
 def _warm(eng, cfg) -> None:
@@ -108,22 +108,22 @@ def _shared_prefix_prompts(cfg, rng, n: int, prefix_len: int = 48) -> list[list[
 
 def run_paged(arch: str = "qwen2-0.5b-smoke", n_requests: int = 24,
               capacity: int = 8, block_size: int = 16,
-              verbose: bool = True) -> dict:
+              seed: int = 0, verbose: bool = True) -> dict:
     """Paged+prefix-cache backend vs. the dense RowPool backend on a
     shared-system-prompt trace: the paged engine must skip the cached prefix
     (hit rate > 0, fewer prompt tokens prefilled) and charge KV per block
     rather than per row."""
     cfg = get_config(arch)
-    rng = np.random.default_rng(1)
+    rng = np.random.default_rng(seed)
     prompts = _shared_prefix_prompts(cfg, rng, n_requests)
     waves = [prompts[i:i + 8] for i in range(0, len(prompts), 8)]
 
     engines = {
-        "dense": _mk_engine(cfg, 4, capacity),
+        "dense": _mk_engine(cfg, 4, capacity, seed),
         "paged": InferenceEngine(
             cfg, capacity=capacity, max_len=96, buckets=(16, 32),
             kv_backend="paged", block_size=block_size,
-            sched=SchedulerConfig(max_prefill_per_step=4)),
+            sched=SchedulerConfig(max_prefill_per_step=4), seed=seed),
     }
     results: dict = {}
     for label, eng in engines.items():
@@ -177,7 +177,7 @@ def run_paged(arch: str = "qwen2-0.5b-smoke", n_requests: int = 24,
 
 def run_migrate(arch: str = "qwen2-0.5b-smoke", n_requests: int = 20,
                 capacity: int = 8, block_size: int = 16,
-                verbose: bool = True) -> dict:
+                seed: int = 0, verbose: bool = True) -> dict:
     """Paged scale-down drain: live block-table migration vs. attrition.
 
     Two paged replicas serve a decaying shared-prefix trace; once arrivals
@@ -193,7 +193,7 @@ def run_migrate(arch: str = "qwen2-0.5b-smoke", n_requests: int = 20,
     cfg = get_config(arch)
     results: dict = {}
     for policy in ("attrition", "migration"):
-        rng = np.random.default_rng(2)
+        rng = np.random.default_rng(seed)
         prompts = _shared_prefix_prompts(cfg, rng, n_requests)
         # decaying arrivals: big burst first, trailing off to nothing
         waves = []
@@ -207,7 +207,7 @@ def run_migrate(arch: str = "qwen2-0.5b-smoke", n_requests: int = 20,
             return InferenceEngine(
                 cfg, capacity=capacity, max_len=96, buckets=(16, 32),
                 kv_backend="paged", block_size=block_size,
-                sched=SchedulerConfig(max_prefill_per_step=4))
+                sched=SchedulerConfig(max_prefill_per_step=4), seed=seed)
         a, b = mk(), mk()
         b.params = a.params
         _warm(a, cfg)
@@ -275,16 +275,167 @@ def run_migrate(arch: str = "qwen2-0.5b-smoke", n_requests: int = 20,
     return results
 
 
-def run(arch: str = "qwen2-0.5b-smoke", n_requests: int = 24,
-        capacity: int = 8, verbose: bool = True) -> dict:
+def _tenant_prompts(cfg, rng, n: int, n_tenants: int = 4,
+                    block_size: int = 16,
+                    tenant_len: int = 48) -> list[list[int]]:
+    """Hierarchical multi-tenant trace: every prompt opens with the same
+    one-block platform preamble, continues with one of ``n_tenants``
+    tenant-specific agent templates, and ends in a short per-request user
+    tail.  First-block affinity routing cannot tell tenants apart (the
+    first block is identical for all of them); a cluster cache directory
+    walking beyond the first block can."""
+    preamble = [int(x) for x in rng.integers(0, cfg.vocab_size, block_size)]
+    tenants = [preamble + [int(x) for x in
+                           rng.integers(0, cfg.vocab_size, tenant_len)]
+               for _ in range(n_tenants)]
+    prompts = []
+    for _ in range(n):
+        t = int(rng.integers(0, n_tenants))
+        tail = [int(x) for x in rng.integers(0, cfg.vocab_size,
+                                             int(rng.integers(4, 13)))]
+        prompts.append(tenants[t] + tail)
+    return prompts
+
+
+def run_directory(arch: str = "qwen2-0.5b-smoke", n_requests: int = 48,
+                  capacity: int = 8, block_size: int = 16,
+                  seed: int = 0, verbose: bool = True,
+                  strict: bool = True) -> dict:
+    """Cluster cache directory vs. first-block prefix affinity vs. p2c on a
+    multi-tenant trace under autoscaling churn.
+
+    All prompts share a one-block platform preamble; each tenant adds a
+    two-block agent template.  The ``"prefix"`` policy keys on the first
+    block only, so every tenant rendezvous-hashes to the *same* replica and
+    the load guard scatters the overflow blindly; ``"directory"`` walks the
+    cluster radix view across the whole prompt and routes each tenant to
+    the replica that actually caches its template — including after
+    scale-down moved those blocks via migration donation.  Time is the
+    logical step clock, so routing, scaling, and the reported metrics are
+    seed-deterministic (no wall-clock in the control path)."""
+    from repro.core.autoscaler import HPAConfig
+    from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+
     cfg = get_config(arch)
-    rng = np.random.default_rng(0)
+    results: dict = {}
+    for policy in ("p2c", "prefix", "directory"):
+        rng = np.random.default_rng(seed)
+        prompts = _tenant_prompts(cfg, rng, n_requests,
+                                  block_size=block_size)
+
+        def mk():
+            return InferenceEngine(
+                cfg, capacity=capacity, max_len=96, buckets=(16, 32),
+                kv_backend="paged", block_size=block_size,
+                sched=SchedulerConfig(max_prefill_per_step=4), seed=seed)
+
+        ocfg = OrchestratorConfig(
+            min_replicas=2, max_replicas=4, lb_policy=policy, lb_seed=seed,
+            hpa=HPAConfig(metric="queue", target=2.0, min_replicas=2,
+                          max_replicas=4, stabilization_s=8.0,
+                          scale_down_cooldown_s=8.0),
+            control_every_steps=2)
+        orch = Orchestrator(mk, ocfg)
+
+        # churn plan: (requests this burst, arrival rate per step, idle
+        # steps after).  Sustained bursts push queue depth over the HPA
+        # target (scale up) and keep every replica busy enough that the
+        # load guard must spill — where tenant-aware spilling pays; the
+        # long lulls drain to nothing (scale down -> drain migration
+        # donates the victim's blocks); the second burst then probes
+        # whether the policy can still find the surviving warm replicas.
+        half = n_requests // 2
+        plan = [(half, 6, 40), (n_requests - half, 6, 40)]
+        t, rid = 0.0, 0
+        for n_burst, rate, idle in plan:
+            left = n_burst
+            while left > 0:
+                for _ in range(min(rate, left)):
+                    orch.submit(Request(rid=rid,
+                                        prompt=list(prompts[rid]),
+                                        sampling=SamplingParams(
+                                            max_new_tokens=8)),
+                                now=t)
+                    rid += 1
+                left -= min(rate, left)
+                orch.step(now=t)
+                t += 1.0
+            for _ in range(idle):
+                orch.step(now=t)
+                t += 1.0
+        while orch.pending() and t < 5000.0:
+            orch.step(now=t)
+            t += 1.0
+        done = list(orch.finished)
+        for e in orch.engines:
+            done.extend(e.finished)
+            e.prefix.check_invariants()
+        assert len(done) == n_requests, \
+            f"{policy}: {len(done)}/{n_requests} served"
+        hit = sum(r.prefix_hit_tokens for r in done)
+        ptoks = sum(len(r.prompt) for r in done)
+        replicas = [n for _, n in orch.scale_history]
+        res = {
+            "cluster_hit_rate": hit / max(ptoks, 1),
+            "prefix_hit_tokens": hit,
+            "prompt_tokens": ptoks,
+            # what the cluster actually prefilled: prompt tokens minus the
+            # ones served straight from replica prefix caches
+            "prefill_tokens_true": ptoks - hit,
+            "mean_ttft_steps": float(np.mean([r.ttft for r in done])),
+            "p90_ttft_steps": float(np.percentile([r.ttft for r in done], 90)),
+            "migrations": orch.migrations.succeeded,
+            "scale_events": len(orch.scale_history),
+            "replicas_peak": max(replicas, default=2),
+            "replicas_final": len(orch.engines),
+            "directory_entries_final": orch.directory.total_entries,
+            "directory_stale_dropped": orch.directory.stats.stale_dropped,
+            "steps": t,
+        }
+        results[policy] = res
+    dirp, pref, p2c = (results[p] for p in ("directory", "prefix", "p2c"))
+    results["hit_rate_gain_vs_prefix"] = (dirp["cluster_hit_rate"]
+                                          - pref["cluster_hit_rate"])
+    results["prefill_saved_vs_prefix"] = 1.0 - (
+        dirp["prefill_tokens_true"] / max(pref["prefill_tokens_true"], 1))
+    if verbose:
+        for policy in ("p2c", "prefix", "directory"):
+            print(f"--- {policy} routing ---")
+            for k, v in results[policy].items():
+                print(f"{k}: {v}")
+        print(f"hit-rate gain (directory - prefix): "
+              f"{results['hit_rate_gain_vs_prefix']:.3f}")
+        print(f"prefill tokens saved vs prefix: "
+              f"{100 * results['prefill_saved_vs_prefix']:.1f}%")
+    # sanity checks are *collected*, not asserted mid-flight: __main__ must
+    # still write the metrics JSON on a failing run (the regression gate's
+    # re-baselining workflow needs the numbers to diagnose / re-commit)
+    checks = [
+        (dirp["replicas_peak"] > 2 and dirp["replicas_final"] <= 3,
+         "the trace never exercised autoscaling churn"),
+        (dirp["cluster_hit_rate"] > pref["cluster_hit_rate"],
+         "directory routing did not beat first-block prefix affinity"),
+        (dirp["prefill_tokens_true"] < pref["prefill_tokens_true"],
+         "directory routing did not reduce prefilled tokens"),
+        (dirp["cluster_hit_rate"] > p2c["cluster_hit_rate"],
+         "directory routing did not beat p2c"),
+    ]
+    results["check_failures"] = [msg for ok, msg in checks if not ok]
+    if strict and results["check_failures"]:
+        raise AssertionError("; ".join(results["check_failures"]))
+    return results
+
+
+def run(arch: str = "qwen2-0.5b-smoke", n_requests: int = 24,
+        capacity: int = 8, seed: int = 0, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    rng = np.random.default_rng(seed)
     prompts = _burst_prompts(cfg, rng, n_requests)
     waves = [prompts[i:i + 8] for i in range(0, len(prompts), 8)]
 
     engines = {}
     for label, mpps in (("single", 1), ("pipeline", 4)):
-        engines[label] = _mk_engine(cfg, mpps, capacity)
+        engines[label] = _mk_engine(cfg, mpps, capacity, seed)
         _warm(engines[label], cfg)
 
     # single CPU wall-clock runs are noisy; re-measure (warm, no recompiles)
@@ -314,21 +465,41 @@ def run(arch: str = "qwen2-0.5b-smoke", n_requests: int = 24,
 if __name__ == "__main__":
     import argparse
     import json
+    import sys
 
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--mode", choices=["pipeline", "paged", "migrate"],
+    ap.add_argument("--mode",
+                    choices=["pipeline", "paged", "migrate", "directory"],
                     default="pipeline",
                     help="pipeline: batched/chunked prefill vs single-prefill; "
                          "paged: paged+prefix-cache backend vs dense rows; "
                          "migrate: paged scale-down drain, live block-table "
-                         "migration vs attrition")
-    ap.add_argument("--n", type=int, default=24)
+                         "migration vs attrition; directory: cluster "
+                         "cache-directory routing vs prefix affinity vs p2c "
+                         "under autoscaling churn")
+    ap.add_argument("--n", type=int, default=None,
+                    help="requests (default: per-mode)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for trace generation and LB/engine "
+                         "construction — runs with the same seed are "
+                         "bit-reproducible (the CI regression gate pins it)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the result dict as JSON (CI artifact)")
     args = ap.parse_args()
-    res = {"paged": run_paged, "migrate": run_migrate,
-           "pipeline": run}[args.mode](n_requests=args.n)
+    fn = {"paged": run_paged, "migrate": run_migrate,
+          "pipeline": run, "directory": run_directory}[args.mode]
+    kwargs = {"seed": args.seed}
+    if args.n is not None:
+        kwargs["n_requests"] = args.n
+    if args.mode == "directory":
+        kwargs["strict"] = False     # report failures after writing the json
+    res = fn(**kwargs)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(res, f, indent=2, default=float)
         print(f"wrote {args.json}")
+    if res.get("check_failures"):
+        print("BENCH CHECKS FAILED:")
+        for msg in res["check_failures"]:
+            print(f"  {msg}")
+        sys.exit(1)

@@ -7,7 +7,7 @@ more than 230x Layer 30's.
 """
 from __future__ import annotations
 
-from repro.core.cluster import (ClusterConfig, SimCluster, closed_loop,
+from repro.core.cluster import (ClusterConfig, SimCluster,
                                 llama2_13b_a100_costs, poisson_open_loop)
 
 

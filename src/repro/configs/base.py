@@ -7,7 +7,6 @@ derives a structure-preserving tiny variant for CPU smoke tests.
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass
 
 

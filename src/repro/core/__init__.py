@@ -5,6 +5,7 @@ loadbalancer, autoscaler, migration, predictor, profiler, microservice —
 plus the cluster simulator and the real-engine orchestrator that host them.
 """
 from repro.core.autoscaler import Autoscaler, HPAConfig  # noqa: F401
+from repro.core.cache_directory import ClusterCacheDirectory, DirectoryStats  # noqa: F401
 from repro.core.loadbalancer import LoadBalancer  # noqa: F401
 from repro.core.migration import MigrationConfig, MigrationManager  # noqa: F401
 from repro.core.predictor import EWMA, HoltWinters, WindowedAR, make_predictor  # noqa: F401

@@ -19,7 +19,6 @@ import dataclasses
 import heapq
 import math
 import random
-from collections import defaultdict
 from typing import Callable
 
 from repro.core.autoscaler import Autoscaler, HPAConfig

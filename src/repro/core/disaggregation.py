@@ -21,6 +21,7 @@ import dataclasses
 import time
 from typing import Callable
 
+from repro.core.cache_directory import ClusterCacheDirectory
 from repro.core.loadbalancer import LoadBalancer
 from repro.core.migration import MigrationConfig, MigrationManager
 from repro.serving.engine import InferenceEngine
@@ -31,7 +32,17 @@ from repro.serving.request import Request, State
 class DisaggConfig:
     prefill_engines: int = 1
     decode_engines: int = 1
+    # decode-pool routing: "least"/"p2c"/... on kv_utilization, or
+    # "directory" — handoffs route to the decode replica whose prefix cache
+    # (per the cluster directory) already holds the most of the request's
+    # materialised sequence, so migration ships fewer blocks
     lb_policy: str = "least"
+    # "directory" load blend, in cached tokens per unit of kv_utilization:
+    # the decode-pool load signal is a [0,1] fraction, so the weight must be
+    # token-scale for the guard to bite — at 64, a replica 0.25 hotter needs
+    # 16 more cached tokens to keep the pick (locality never pins every
+    # handoff to one full replica)
+    directory_load_weight: float = 64.0
     # hand chunked prompts off at their last chunk boundary instead of
     # waiting for the first token (False restores first-token-only handoff)
     chunk_handoff: bool = True
@@ -55,7 +66,16 @@ class DisaggregatedServer:
         # decode engines share the first prefill engine's weights (one model)
         for e in self.prefill_pool[1:] + self.decode_pool:
             e.params = self.prefill_pool[0].params
-        self.balancer = LoadBalancer(cfg.lb_policy)
+        # stable replica identities + a directory over the decode pool's
+        # prefix caches: the decode-routing hook scores handoff targets by
+        # cached overlap with the request's materialised sequence
+        self.directory = ClusterCacheDirectory()
+        for i, e in enumerate(self.prefill_pool + self.decode_pool):
+            e.lb_id = i
+        for e in self.decode_pool:
+            e.attach_cache_directory(self.directory, e.lb_id)
+        self.balancer = LoadBalancer(cfg.lb_policy, directory=self.directory,
+                                     directory_load_weight=cfg.directory_load_weight)
         self.migrations = MigrationManager(cfg.migration)
         self.finished: list[Request] = []
         self.history: list[DisaggStepStats] = []
@@ -86,9 +106,18 @@ class DisaggregatedServer:
             pe.step(now)
             for req in self._handoff_ready(pe):
                 # KV pressure is the real decode-pool signal: occupied rows
-                # under-count on paged engines, whose cost is mapped blocks
+                # under-count on paged engines, whose cost is mapped blocks.
+                # Directory routing scores the sequence whose KV actually
+                # moves, blended against kv_utilization through the
+                # token-scale cfg.directory_load_weight
+                seq = pe.migration_sequence(req.rid) \
+                    if self.balancer.policy == "directory" else None
                 dst = self.balancer.pick(self.decode_pool,
-                                         load=lambda e: e.kv_utilization())
+                                         load=lambda e: e.kv_utilization(),
+                                         tokens=seq,
+                                         block_size=getattr(
+                                             self.decode_pool[0],
+                                             "block_size", 16))
                 self.migrations.migrate(pe, dst, req.rid, now,
                                         src_idx=pi,
                                         dst_idx=len(self.prefill_pool)

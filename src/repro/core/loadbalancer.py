@@ -3,10 +3,13 @@
 Istio-style request routing over the replicas of one (micro)service.
 Policies: round-robin, least-outstanding-requests, power-of-two-choices,
 weighted join-shortest-queue (weights = replica capacity, e.g. heterogeneous
-hardware), and prefix-affinity routing ("prefix"): requests sharing a prompt
+hardware), prefix-affinity routing ("prefix": requests sharing a prompt
 prefix rendezvous-hash to the same replica so its paged-KV prefix cache
-keeps serving them, with a load guard that spills to the least-loaded
-replica when the affine one is hot — locality must never create a hotspot.
+keeps serving them), and cluster-directory routing ("directory": replicas
+are scored by the *actual* cached-token overlap the cluster cache directory
+reports for the whole prompt — beyond the first block — blended with load
+slack).  Both locality policies carry a load guard: locality must never
+create a hotspot.
 """
 from __future__ import annotations
 
@@ -22,22 +25,31 @@ def _rendezvous(key: Hashable, idx: int) -> int:
 
 class LoadBalancer:
     def __init__(self, policy: str = "p2c", seed: int = 0,
-                 affinity_slack: float = 4.0):
-        assert policy in ("rr", "least", "p2c", "wjsq", "prefix")
+                 affinity_slack: float = 4.0,
+                 directory=None, directory_load_weight: float = 4.0):
+        assert policy in ("rr", "least", "p2c", "wjsq", "prefix", "directory")
         self.policy = policy
         self._rr = 0
         self._rng = random.Random(seed)
         # "prefix": max load gap over the coolest replica before affinity
         # yields to load balancing
         self.affinity_slack = affinity_slack
+        # "directory": the ClusterCacheDirectory scored against, and how
+        # many cached prompt tokens one unit of load is worth — the blend
+        # that keeps cache-chasing from piling requests on one replica
+        self.directory = directory
+        self.directory_load_weight = directory_load_weight
 
     def pick(self, replicas: Sequence, load: Callable[[object], float],
              weight: Callable[[object], float] = lambda r: 1.0,
-             affinity_key: Hashable | None = None) -> object:
+             affinity_key: Hashable | None = None,
+             tokens: Sequence[int] | None = None,
+             block_size: int = 16) -> object:
         """Choose a replica.  ``load(r)`` = outstanding work (queue depth or
         busy seconds); ``weight(r)`` = capacity multiplier; ``affinity_key``
         = routing key for the "prefix" policy (e.g. the prompt's first KV
-        block of tokens)."""
+        block of tokens); ``tokens``/``block_size`` = the whole prompt for
+        the "directory" policy's cluster-radix overlap walk."""
         live = [r for r in replicas]
         assert live, "no replicas"
         if len(live) == 1:
@@ -65,5 +77,19 @@ class LoadBalancer:
             # always terminates: the minimum-load replica passes the guard
             return next(r for r in ranked
                         if load(r) <= lo + self.affinity_slack)
+        if self.policy == "directory":
+            if self.directory is None or tokens is None:
+                return min(live, key=load)
+            ov = self.directory.overlaps(tokens, block_size)
+            lo = min(load(r) for r in live)
+            # expected cached tokens minus the load premium over the coolest
+            # replica: a replica must bring directory_load_weight extra
+            # cached tokens per unit of extra load to justify the pick.
+            # Cold directory / no overlap degrades to least-loaded exactly.
+            def score(r):
+                o = ov.get(getattr(r, "lb_id", id(r)), 0)
+                return o - self.directory_load_weight * (load(r) - lo)
+            best = max(live, key=lambda r: (score(r), -load(r)))
+            return best
         # weighted JSQ: smallest load normalised by capacity
         return min(live, key=lambda r: load(r) / max(weight(r), 1e-9))

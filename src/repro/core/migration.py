@@ -16,7 +16,7 @@ import dataclasses
 from typing import Sequence
 
 from repro.serving.engine import InferenceEngine
-from repro.serving.request import Request, State
+from repro.serving.request import State
 
 
 @dataclasses.dataclass

@@ -20,6 +20,7 @@ import time
 from typing import Callable
 
 from repro.core.autoscaler import Autoscaler, HPAConfig
+from repro.core.cache_directory import ClusterCacheDirectory
 from repro.core.loadbalancer import LoadBalancer
 from repro.core.migration import MigrationConfig, MigrationManager
 from repro.core.predictor import make_predictor
@@ -37,9 +38,17 @@ class OrchestratorConfig:
         scale_down_cooldown_s=5.0))
     migration: MigrationConfig = dataclasses.field(default_factory=MigrationConfig)
     lb_policy: str = "least"
+    lb_seed: int = 0                # p2c sampling seed (bench reproducibility)
+    # "directory" load blend: cached tokens one unit of pending() load is
+    # worth — larger sticks harder to warm replicas, smaller spills sooner
+    directory_load_weight: float = 4.0
     control_every_steps: int = 4
     predictor: str = "holt"
     cold_start_steps: int = 0       # extra steps before a new replica serves
+    # cluster cache directory: full-state anti-entropy every N control ticks
+    # (deltas stream continuously; reconciliation repairs lost events and
+    # orphaned radix descendants).  0 disables periodic reconciliation.
+    directory_reconcile_every: int = 4
 
 
 class Orchestrator:
@@ -48,39 +57,61 @@ class Orchestrator:
         self.cfg = cfg
         self.make_engine = make_engine
         self._next_lb_id = 0
+        # cluster-level prefix-cache directory: every paged replica's index
+        # deltas stream into it; the "directory" LB policy routes on it
+        self.directory = ClusterCacheDirectory()
         self.engines: list[InferenceEngine] = [self._spawn()
                                                for _ in range(cfg.min_replicas)]
         self._cold: dict[int, int] = {}
         self.profiler = Profiler()
         self.autoscaler = Autoscaler(cfg.hpa, make_predictor(cfg.predictor))
-        self.balancer = LoadBalancer(cfg.lb_policy)
+        self.balancer = LoadBalancer(cfg.lb_policy, seed=cfg.lb_seed,
+                                     directory=self.directory,
+                                     directory_load_weight=cfg.directory_load_weight)
         self.migrations = MigrationManager(cfg.migration)
         self._steps = 0
+        self._controls = 0
         self.scale_history: list[tuple[float, int]] = []
         # requests that completed on replicas since retired by scale-down
         self.finished: list[Request] = []
 
     def _spawn(self) -> InferenceEngine:
         """Create a replica with a stable monotonic identity: prefix-affinity
-        rendezvous hashing keys on it, so routing is reproducible and
-        membership churn remaps only the departed replica's keys."""
+        rendezvous hashing and the cache directory key on it, so routing is
+        reproducible and membership churn remaps only the departed replica's
+        keys."""
         eng = self.make_engine()
         eng.lb_id = self._next_lb_id
         self._next_lb_id += 1
+        eng.attach_cache_directory(self.directory, eng.lb_id)
         return eng
 
     # ------------------------------------------------------------- routing
     def submit(self, req: Request, now: float | None = None) -> None:
         now = time.perf_counter() if now is None else now
         live = [e for i, e in enumerate(self.engines) if self._cold.get(i, 0) <= 0]
-        key = None
+        key, tokens = None, None
+        bs = getattr(live[0], "block_size", 16) if live else 16
         if self.balancer.policy == "prefix":
             # route by the prompt's first KV block so requests sharing a
             # system prefix land where its blocks are already cached
-            bs = getattr(live[0], "block_size", 16) if live else 16
             key = tuple(req.prompt[:bs])
+        elif self.balancer.policy == "directory":
+            # route by the directory's cluster radix view of the *whole*
+            # prompt: the replica with the deepest cached overlap wins
+            # unless the load blend says it is too hot
+            tokens = req.prompt
         eng = self.balancer.pick(live, load=lambda e: e.pending(),
-                                 affinity_key=key)
+                                 affinity_key=key, tokens=tokens,
+                                 block_size=bs)
+        if tokens is not None and getattr(eng, "paged", False) \
+                and getattr(eng, "prefix_enabled", False):
+            # routing intent: same-prefix requests arriving before this one
+            # retires (and commits its blocks) co-locate with it instead of
+            # scattering by load.  Gated to engines that publish into the
+            # directory — an engine that never commits or reconciles must
+            # not accrue phantom-overlap intents either.
+            self.directory.announce(eng.lb_id, tokens, bs)
         req.replica = self.engines.index(eng)
         eng.submit(req, now)
 
@@ -118,6 +149,13 @@ class Orchestrator:
             if removed:
                 for i in removed:      # a retired replica's served requests
                     self.finished.extend(self.engines[i].finished)
+                    # scale-down invalidation: the departing replica's pool
+                    # dies with it — the directory must stop routing to it.
+                    # drop_replica directly (not only via the sink detach):
+                    # intents must die even for replicas that never
+                    # published (dense / prefix-disabled)
+                    self.engines[i].detach_cache_directory()
+                    self.directory.drop_replica(self.engines[i].lb_id)
                 self.engines = [e for i, e in enumerate(self.engines)
                                 if i not in removed]
                 self._cold = {}
@@ -131,6 +169,20 @@ class Orchestrator:
                 if rid is not None:
                     self.migrations.migrate(self.engines[src], self.engines[dst],
                                             rid, now, src, dst)
+
+        # cache-directory anti-entropy + telemetry: deltas stream on every
+        # index mutation; the periodic full-state reconcile repairs what
+        # they can miss (orphaned radix descendants, detached sinks)
+        self._controls += 1
+        every = self.cfg.directory_reconcile_every
+        if every and self._controls % every == 0:
+            for e in self.engines:
+                e.reconcile_cache_directory(self.directory)
+        # gauge, not a token counter: the util store is a plain windowed
+        # float series, which is what an absolute entry count needs
+        # (observe_tokens would turn it into a bogus tokens/s rate)
+        self.profiler.observe_util("cluster/directory_entries", now,
+                                   float(self.directory.total_entries))
 
     def _drain(self, victim: int, keep: list[int], now: float) -> None:
         """Move every live request off a scale-down victim: decode rows and

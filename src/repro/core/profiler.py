@@ -7,7 +7,6 @@ the input to load balancing, autoscaling and migration decisions.
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
 import math
 from collections import defaultdict, deque

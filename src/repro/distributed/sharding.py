@@ -17,7 +17,6 @@ state is fully partitioned across the data-parallel group.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax

@@ -12,7 +12,6 @@ step, no memory traffic: its DMA loads the same block as the previous step).
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

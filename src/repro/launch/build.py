@@ -10,15 +10,13 @@ import math
 from typing import Any
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.configs.perf import BASELINE, PerfConfig
 from repro.distributed.sharding import Sharder, opt_sharding_tree, rules_for
 from repro.launch import specs as SP
 from repro.models import params as P
-from repro.models.lm import make_model
 from repro.training import optimizer as OPT
 from repro.training.steps import make_decode_step, make_prefill_step, make_train_step
 

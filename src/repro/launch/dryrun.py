@@ -23,7 +23,7 @@ import traceback
 import jax
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_supported
-from repro.configs.perf import BASELINE, PerfConfig, with_overrides
+from repro.configs.perf import PerfConfig, with_overrides
 from repro.launch import hlo as H
 from repro.launch.build import build_cell, default_perf
 from repro.launch.mesh import HBM_BYTES, make_production_mesh

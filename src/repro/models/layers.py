@@ -14,13 +14,10 @@ Conventions
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.params import ParamSpec
@@ -161,7 +158,6 @@ def attention_full(
     (self-attention) when causal; cross-attention passes causal=False.
     """
     B, Sq, H, d = q.shape
-    Skv = k.shape[1]
     scale = scale if scale is not None else d ** -0.5
     cq = min(q_chunk, Sq)
     n = math.ceil(Sq / cq)
@@ -351,7 +347,6 @@ def cache_write_decode(cache, k, v, pos, *, ring: bool):
     fuses cleanly on both backends.  The real-TPU serving path uses the
     paged-KV Pallas kernel (kernels/paged_attention) where the write is a
     single-page DMA."""
-    B = k.shape[0]
     L = cache["k"].shape[1]
     slot = (pos % L).astype(jnp.int32)
     hit = jnp.arange(L, dtype=jnp.int32)[None, :] == slot[:, None]   # (B,L)

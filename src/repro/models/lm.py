@@ -13,7 +13,6 @@ Modes:
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any
 

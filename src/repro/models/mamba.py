@@ -6,13 +6,12 @@ fp32; matmuls bf16 with fp32 accumulation.  Heads shard over the model axis.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import _noop_shd, rmsnorm_specs
+from repro.models.layers import _noop_shd
 from repro.models.params import ParamSpec
 
 f32 = jnp.float32
@@ -187,7 +186,8 @@ def ssd_apply_full(p, x, cfg: ModelConfig, shd=_noop_shd, *, want_state: bool = 
     K = cfg.ssm_conv
     assert S >= K - 1, "prefill shorter than conv receptive field"
     if true_len is None:
-        tail = lambda t: t[:, S - (K - 1):]
+        def tail(t):
+            return t[:, S - (K - 1):]
     else:
         # per-row last K-1 *valid* raw projections (pre-conv) for the decode
         # conv state; rows assumed to have true_len >= K-1
@@ -239,7 +239,8 @@ def ssd_apply_chunk(p, x, cache, cfg: ModelConfig, shd=_noop_shd, *, true_len):
     Q = min(cfg.ssm_chunk, C)
     lead = (-C) % Q
     if lead:  # zero front-pad to a chunk multiple: dt=0/x=0 state no-ops
-        pad = lambda t: jnp.pad(t, ((0, 0), (lead, 0)) + ((0, 0),) * (t.ndim - 2))
+        def pad(t):
+            return jnp.pad(t, ((0, 0), (lead, 0)) + ((0, 0),) * (t.ndim - 2))
         xc_p, Bc_p, Cc_p, da_p, dt_p, z_p = map(pad, (xc, Bc, Cc, da, dt, z))
     else:
         xc_p, Bc_p, Cc_p, da_p, dt_p, z_p = xc, Bc, Cc, da, dt, z
@@ -273,7 +274,6 @@ def ssd_apply_chunk(p, x, cache, cfg: ModelConfig, shd=_noop_shd, *, true_len):
 
 def ssd_apply_decode(p, x, cache, cfg: ModelConfig, shd=_noop_shd):
     """One-token recurrent step.  x: (B,1,D) -> (y (B,1,D), new cache)."""
-    B = x.shape[0]
     H, P, G, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
     z, xr, Br, Cr, dt = _project(p, x, cfg)
     xt, nconv_x = _conv_step(cache["conv_x"], xr[:, 0], p["conv_x"])

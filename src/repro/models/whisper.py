@@ -8,7 +8,6 @@ prefill, immutable afterwards).
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

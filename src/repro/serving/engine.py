@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -919,6 +919,41 @@ class InferenceEngine:
             self._consumed[row] = payload["pos"]
             req.state = State.PREFILL
         return True
+
+    # ------------------------------------------------- cluster cache directory
+    def attach_cache_directory(self, directory, replica_id: int | None = None) -> None:
+        """Start publishing this replica's prefix-index deltas (insert,
+        evict — migration donation and drain flow through the same two
+        events) into a cluster cache directory, and push the current index
+        so the directory is warm from the first lookup.  A no-op on dense
+        or prefix-cache-disabled engines — they have nothing to advertise."""
+        if not (self.paged and self.prefix_enabled):
+            return
+        rid = replica_id if replica_id is not None \
+            else getattr(self, "lb_id", id(self))
+        self.prefix.attach_sink(directory, rid)
+        directory.reconcile(rid, self.prefix.reachable_chains())
+
+    def detach_cache_directory(self, directory=None) -> None:
+        """Stop publishing; with ``directory`` given, also invalidate every
+        entry this replica claimed (scale-down: its pool is going away)."""
+        if not self.paged:
+            return
+        if directory is not None and self.prefix.replica_id is not None:
+            directory.drop_replica(self.prefix.replica_id)
+        self.prefix.detach_sink()
+
+    def reconcile_cache_directory(self, directory) -> tuple[int, int]:
+        """Periodic anti-entropy: replace the directory's view of this
+        replica with the chains its radix tree can actually serve.  Repairs
+        orphaned-descendant drift and any lost events; cheap enough
+        (O(cached blocks)) to run every few control ticks."""
+        if not (self.paged and self.prefix_enabled):
+            return (0, 0)
+        rid = self.prefix.replica_id
+        if rid is None:
+            rid = getattr(self, "lb_id", id(self))
+        return directory.reconcile(rid, self.prefix.reachable_chains())
 
     def kv_utilization(self) -> float:
         """KV memory in use as a fraction of the backend's budget: live

@@ -22,14 +22,34 @@ mechanisms on top of a plain free list:
 The engine charges KV memory per block through this class (``used_blocks`` /
 ``utilization``), which is what the control plane's autoscaler and balancer
 consume instead of the dense per-row worst case.
+
+A cluster cache directory (``core/cache_directory.py``) can subscribe to
+index mutations through :meth:`PrefixCache.attach_sink`: every full block
+indexed or dropped is published as a content-addressed **chain hash** —
+``chain_key`` folded block-by-block from the radix root — so replicas with
+different local block ids and node ids still report the same key for the
+same cached token prefix.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from collections import OrderedDict
 
 
 Key = tuple[int, ...]
+
+#: chain hash of the radix root (the empty prefix)
+ROOT_CHAIN = 0
+
+
+def chain_key(parent_chain: int, tokens: Key) -> int:
+    """Content address of a full cached block: hash of the parent prefix's
+    chain and the block's own tokens.  Replica-independent — two caches
+    holding the same token prefix report the same chain — which is what
+    lets a cluster directory aggregate per-replica radix trees."""
+    h = hashlib.blake2b(f"{parent_chain}/{tokens!r}".encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "big")
 
 
 @dataclasses.dataclass
@@ -38,6 +58,7 @@ class CachedBlock:
     parent: int              # radix node the block extends (0 = root)
     tokens: Key              # tokens stored in the block (len == bs if full)
     node: int | None         # this block's radix node id; None for tails
+    chain: int | None = None  # content chain hash (full blocks only)
 
 
 class PrefixCache:
@@ -65,6 +86,49 @@ class PrefixCache:
         self.inserted_blocks = 0
         # bumped whenever the index mutates; lets callers memoise lookups
         self.generation = 0
+        # optional cluster-directory event sink (attach_sink): receives
+        # on_insert/on_evict deltas for every full block this index retains
+        self._sink = None
+        self.replica_id: int | None = None
+
+    # ------------------------------------------------------- directory sink
+    def attach_sink(self, sink, replica_id: int) -> None:
+        """Publish index deltas to a cluster cache directory.  ``sink``
+        needs ``on_insert(replica_id, chain)`` and
+        ``on_evict(replica_id, chain)``; the current index is pushed via
+        :meth:`reachable_chains` + ``sink.reconcile`` by the caller."""
+        self._sink = sink
+        self.replica_id = replica_id
+
+    def detach_sink(self) -> None:
+        self._sink = None
+
+    def _publish(self, event: str, chain: int | None) -> None:
+        if self._sink is None or chain is None:
+            return
+        if event == "insert":
+            self._sink.on_insert(self.replica_id, chain)
+        else:
+            self._sink.on_evict(self.replica_id, chain)
+
+    def reachable_chains(self) -> set[int]:
+        """Chain hashes of every full block reachable from the radix root —
+        the prefixes :meth:`match` can actually serve.  Orphaned descendants
+        of an evicted parent still hold pool blocks (``_entry``) but are
+        excluded: a directory reconciled against this set never routes a
+        prompt to an unservable prefix."""
+        children: dict[int, list[CachedBlock]] = {}
+        for e in self._full.values():
+            children.setdefault(e.parent, []).append(e)
+        out: set[int] = set()
+        stack = [0]
+        while stack:
+            node = stack.pop()
+            for e in children.get(node, ()):
+                if e.chain is not None:
+                    out.add(e.chain)
+                stack.append(e.node)
+        return out
 
     # ------------------------------------------------------------- refcounts
     def ref(self, block: int) -> int:
@@ -118,7 +182,10 @@ class PrefixCache:
             if self._full.get((e.parent, e.tokens)) is e:
                 del self._full[(e.parent, e.tokens)]
             # descendants keyed under e.node become unreachable; they stay
-            # refcounted/LRU-tracked and age out through normal eviction
+            # refcounted/LRU-tracked and age out through normal eviction —
+            # the directory keeps their chains until reconciliation, which
+            # is the staleness the directory contract tolerates
+            self._publish("evict", e.chain)
         elif self._tail.get(e.parent) is e:
             del self._tail[e.parent]
 
@@ -179,8 +246,10 @@ class PrefixCache:
         added = 0
         nfull = n_valid // bs
         node, chain_ok = 0, True
+        chain = ROOT_CHAIN
         for i in range(nfull):
             btoks = tuple(tokens[i * bs : (i + 1) * bs])
+            chain = chain_key(chain, btoks)
             e = self._full.get((node, btoks))
             if e is not None:                  # path already indexed: descend
                 node = e.node
@@ -189,10 +258,11 @@ class PrefixCache:
             if b in self._entry:               # indexed under another path —
                 chain_ok = False               # deeper nodes would be orphans
                 break
-            e = CachedBlock(b, node, btoks, node=self._next_node)
+            e = CachedBlock(b, node, btoks, node=self._next_node, chain=chain)
             self._next_node += 1
             self._full[(node, btoks)] = e
             self._entry[b] = e
+            self._publish("insert", chain)
             added += 1
             node = e.node
         # partial tail
@@ -319,8 +389,9 @@ class PrefixCache:
         for (pid, btoks), e in self._full.items():
             assert self._entry.get(e.block) is e
             assert e.parent == pid and e.tokens == btoks and e.node is not None
+            assert e.chain is not None, "full block missing its chain hash"
         for pid, e in self._tail.items():
             assert self._entry.get(e.block) is e
-            assert e.parent == pid and e.node is None
+            assert e.parent == pid and e.node is None and e.chain is None
         tracked = len(free) + len(self._ref) + len(self._lru)
         assert tracked == self.num_blocks, (tracked, self.num_blocks)

@@ -3,7 +3,6 @@ the distribution layer — see distributed/sharding.zero1_shardings)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ large train cells (activation bytes scale with mb, not global batch).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ import time
 from typing import Callable
 
 import jax
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.configs.perf import BASELINE, PerfConfig

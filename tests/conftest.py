@@ -1,6 +1,5 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the real single CPU device; only launch/dryrun.py forces 512 devices."""
-import jax
 import pytest
 
 

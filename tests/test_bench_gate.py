@@ -1,0 +1,76 @@
+"""The bench-regression CI gate: the committed baselines must pass against
+themselves, and synthetically degraded metrics must fail (exit != 0)."""
+import copy
+import json
+import pathlib
+
+import pytest
+
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "benchmarks"))
+from check_regression import BASELINE_DIR, GATES, _dig, compare, main  # noqa: E402
+
+BENCHES = sorted(GATES)
+
+
+def _baseline(bench: str) -> dict:
+    with open(BASELINE_DIR / f"BENCH_{bench}.json") as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("bench", BENCHES)
+def test_baseline_passes_against_itself(bench):
+    base = _baseline(bench)
+    assert compare(bench, base, base) == []
+
+
+@pytest.mark.parametrize("bench", BENCHES)
+def test_every_gated_metric_exists_in_baseline(bench):
+    """Each gated metric path must resolve to a number in the committed
+    baseline — a gate on a metric the bench no longer emits would
+    otherwise silently rot (checked directly, independent of compare())."""
+    base = _baseline(bench)
+    for path in GATES[bench]:
+        v = _dig(base, path)
+        assert isinstance(v, (int, float)), f"{path} missing: {v!r}"
+
+
+def _degrade(d: dict, path: str, higher: bool):
+    parts = path.split(".")
+    cur = d
+    for p in parts[:-1]:
+        cur = cur[p]
+    v = float(cur[parts[-1]])
+    # well past any tolerance+slack in either direction
+    cur[parts[-1]] = v * 0.2 - 10 if higher else v * 5 + 10
+
+
+@pytest.mark.parametrize("bench", BENCHES)
+def test_degraded_metrics_fail(bench):
+    base = _baseline(bench)
+    for path, (higher, _, _) in GATES[bench].items():
+        fresh = copy.deepcopy(base)
+        _degrade(fresh, path, higher)
+        fails = compare(bench, fresh, base)
+        assert any(path in f for f in fails), \
+            f"degrading {path} did not trip the gate"
+
+
+def test_missing_metric_fails():
+    base = _baseline("paged")
+    fresh = copy.deepcopy(base)
+    del fresh["paged"]["prefix_hit_rate"]
+    assert any("missing" in f for f in compare("paged", fresh, base))
+
+
+def test_cli_exit_codes(tmp_path):
+    base = _baseline("directory")
+    ok = tmp_path / "ok.json"
+    ok.write_text(json.dumps(base))
+    assert main(["--bench", "directory", "--fresh", str(ok)]) == 0
+    bad = copy.deepcopy(base)
+    bad["directory"]["cluster_hit_rate"] *= 0.5
+    badp = tmp_path / "bad.json"
+    badp.write_text(json.dumps(bad))
+    assert main(["--bench", "directory", "--fresh", str(badp)]) == 1

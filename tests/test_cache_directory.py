@@ -1,0 +1,356 @@
+"""Cluster cache directory: event-sink tracking, staleness tolerance,
+scale-down invalidation, migration-donation visibility, and the
+conservative-subset property (hypothesis-guarded)."""
+import numpy as np
+import pytest
+
+from repro.core.cache_directory import ClusterCacheDirectory
+from repro.core.loadbalancer import LoadBalancer
+from repro.serving.prefix_cache import PrefixCache
+
+
+def _fill(pc: PrefixCache, tokens: list[int]) -> None:
+    """Cache ``tokens`` in ``pc`` the way a retiring row would."""
+    nblk = -(-len(tokens) // pc.block_size)
+    blocks = pc.allocate(nblk)
+    assert blocks is not None
+    pc.insert(tokens, blocks, len(tokens))
+    pc.release(blocks)
+
+
+def _entry_chains(pc: PrefixCache) -> set[int]:
+    return {e.chain for e in pc._entry.values() if e.chain is not None}
+
+
+class _R:
+    def __init__(self, lb_id, load=0.0):
+        self.lb_id, self.load = lb_id, load
+
+
+# ------------------------------------------------------------- delta stream
+def test_directory_tracks_inserts_and_walks_beyond_first_block():
+    d = ClusterCacheDirectory()
+    a, b = PrefixCache(16, 4), PrefixCache(16, 4)
+    a.attach_sink(d, 0)
+    b.attach_sink(d, 1)
+    common = [1, 2, 3, 4]                     # shared first block
+    _fill(a, common + [5, 6, 7, 8])           # tenant A: 2 blocks deep
+    _fill(b, common + [9, 10, 11, 12])        # tenant B: diverges at block 2
+    # first block is on both; the deeper walk tells the tenants apart
+    assert d.overlaps(common + [5, 6, 7, 8, 99], 4) == {0: 8, 1: 4}
+    assert d.overlaps(common + [9, 10, 11, 12, 99], 4) == {0: 4, 1: 8}
+    # an unknown prompt overlaps nothing
+    assert d.overlaps([70, 71, 72, 73, 74], 4) == {}
+    # the last prompt token never counts (it must be recomputed)
+    assert d.overlaps(common, 4) == {}
+
+
+def test_directory_eviction_deltas_flow():
+    d = ClusterCacheDirectory()
+    pc = PrefixCache(4, 4)
+    pc.attach_sink(d, 7)
+    _fill(pc, list(range(8)))                 # 2 cached blocks
+    assert len(d.claimed(7)) == 2
+    # allocating the whole pool evicts the cached blocks -> evict deltas
+    got = pc.allocate(4)
+    assert got is not None
+    pc.release(got)
+    assert d.claimed(7) == set()
+    assert d.stats.evicts == 2
+
+
+def test_directory_staleness_and_reconcile_repair():
+    """Lost evict events leave stale claims; routing on them is still safe
+    (the replica just misses), and reconciliation repairs the view."""
+    d = ClusterCacheDirectory()
+    pc = PrefixCache(4, 4)
+    pc.attach_sink(d, 0)
+    seq = list(range(8))
+    _fill(pc, seq)
+    pc.detach_sink()                          # simulate a lossy event stream
+    got = pc.allocate(4)                      # evicts both cached blocks
+    pc.release(got)
+    # directory still claims content the replica evicted: stale, not wrong
+    assert len(d.claimed(0)) == 2
+    assert d.overlaps(seq + [99], 4) == {0: 8}
+    # ...the replica itself serves correctly regardless of the stale claim
+    assert pc.lookup(seq + [99]) == 0
+    pc.attach_sink(d, 0)
+    dropped, added = d.reconcile(0, pc.reachable_chains())
+    assert (dropped, added) == (2, 0)
+    assert d.claimed(0) == set()
+    assert d.overlaps(seq + [99], 4) == {}
+
+
+def test_directory_orphaned_descendants_repaired_by_reconcile():
+    """Evicting a parent block orphans its descendants: they still hold
+    pool blocks (delta stream keeps them claimed) but cannot be served.
+    reachable_chains excludes them, so reconcile trims the claim."""
+    pc = PrefixCache(8, 4)
+    d = ClusterCacheDirectory()
+    pc.attach_sink(d, 0)
+    _fill(pc, list(range(12)))                # chain of 3 blocks
+    # evict exactly the root block (oldest in LRU)
+    root_block = next(e.block for e in pc._entry.values() if e.parent == 0)
+    pc._lru.pop(root_block)
+    pc._uncache(root_block)
+    pc._free.append(root_block)
+    pc.check_invariants()
+    claimed = d.claimed(0)
+    reach = pc.reachable_chains()
+    assert reach == set()                     # nothing servable from the root
+    assert len(claimed) == 2                  # orphans still claimed (stale)
+    assert claimed == _entry_chains(pc)       # ...but conservative vs _entry
+    d.reconcile(0, pc.reachable_chains())
+    assert d.claimed(0) == set()
+
+
+def test_directory_drop_replica_and_intents():
+    d = ClusterCacheDirectory()
+    seq = list(range(9))
+    d.announce(1, seq, 4)                     # routing intent, nothing cached
+    assert d.overlaps(seq, 4) == {1: 8}
+    # committed view unaffected by intents
+    assert d.claimed(1) == set()
+    d.drop_replica(1)
+    assert d.overlaps(seq, 4) == {}
+    # reconcile also clears intents (the request either committed or died)
+    d.announce(2, seq, 4)
+    d.reconcile(2, set())
+    assert d.overlaps(seq, 4) == {}
+
+
+# ------------------------------------------------------------- LB policy
+def test_lb_directory_policy_blends_overlap_and_load():
+    d = ClusterCacheDirectory()
+    pc = PrefixCache(16, 4)
+    pc.attach_sink(d, 0)
+    seq = list(range(12))
+    _fill(pc, seq)
+    lb = LoadBalancer("directory", directory=d, directory_load_weight=4.0)
+    rs = [_R(0), _R(1)]
+    prompt = seq + [99]
+
+    def load(r):
+        return r.load
+    assert lb.pick(rs, load=load, tokens=prompt, block_size=4).lb_id == 0
+    # 12 cached tokens are worth 3 units of load at weight 4: beyond that
+    # the cold replica wins — locality never creates a hotspot
+    rs[0].load = 2.9
+    assert lb.pick(rs, load=load, tokens=prompt, block_size=4).lb_id == 0
+    rs[0].load = 3.1
+    assert lb.pick(rs, load=load, tokens=prompt, block_size=4).lb_id == 1
+    # no tokens / cold directory degrade to least-loaded
+    assert lb.pick(rs, load=load).lb_id == 1
+    assert lb.pick(rs, load=load, tokens=[500, 501], block_size=4).lb_id == 1
+
+
+# ------------------------------------------------- orchestrator integration
+def _paged_orchestrator(policy: str, n_replicas: int = 2,
+                        max_replicas: int = 2):
+    from repro.configs import get_config
+    from repro.core.autoscaler import HPAConfig
+    from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+    from repro.serving import InferenceEngine
+    from repro.serving.scheduler import SchedulerConfig
+
+    cfg = get_config("qwen2-0.5b-smoke")
+
+    def mk():
+        return InferenceEngine(cfg, capacity=4, max_len=64, buckets=(8, 16),
+                               kv_backend="paged", block_size=8,
+                               sched=SchedulerConfig(max_prefill_per_step=2))
+
+    ocfg = OrchestratorConfig(
+        min_replicas=n_replicas, max_replicas=max_replicas, lb_policy=policy,
+        hpa=HPAConfig(metric="queue", target=4.0, min_replicas=1,
+                      max_replicas=max_replicas, stabilization_s=2.0,
+                      scale_down_cooldown_s=2.0),
+        control_every_steps=2, directory_reconcile_every=2)
+    return Orchestrator(mk, ocfg), cfg
+
+
+@pytest.mark.slow
+def test_directory_scale_down_invalidation_and_consistency():
+    """Engines' caches stream into the orchestrator directory; a drained
+    replica's claims disappear with it, and surviving claims stay a subset
+    of what each replica's index retains."""
+    from repro.serving import Request, SamplingParams
+
+    orch, cfg = _paged_orchestrator("directory", n_replicas=2, max_replicas=2)
+    rng = np.random.default_rng(0)
+    sys_prefix = [int(x) for x in rng.integers(0, cfg.vocab_size, 16)]
+    t = 0.0
+    for rid in range(8):
+        tail = [int(x) for x in rng.integers(0, cfg.vocab_size, 4)]
+        orch.submit(Request(rid=rid, prompt=sys_prefix + tail,
+                            sampling=SamplingParams(max_new_tokens=4)), now=t)
+    while orch.pending() and t < 500:
+        orch.step(now=t)
+        t += 1.0
+    done = len(orch.finished) + sum(len(e.finished) for e in orch.engines)
+    assert done == 8
+    live_ids = {e.lb_id for e in orch.engines}
+    # queue drained to zero -> the HPA scaled down; departed replicas must
+    # have been invalidated
+    assert orch.directory.replicas() <= live_ids
+    for e in orch.engines:
+        assert orch.directory.claimed(e.lb_id) <= _entry_chains(e.prefix)
+    # routing still works post-churn and prefers a warm replica
+    probe = sys_prefix + [1, 2, 3]
+    ov = orch.directory.overlaps(probe, 8)
+    assert ov and max(ov.values()) >= 8
+
+
+@pytest.mark.slow
+def test_migration_donation_is_routable():
+    """After a migration, the destination's donated blocks are claimed in
+    the directory — the next same-prefix request routes to the adopter."""
+    from repro.configs import get_config
+    from repro.core.migration import MigrationManager
+    from repro.serving import InferenceEngine, Request, SamplingParams
+    from repro.serving.scheduler import SchedulerConfig
+
+    cfg = get_config("qwen2-0.5b-smoke")
+    d = ClusterCacheDirectory()
+
+    def mk(lb_id):
+        e = InferenceEngine(cfg, capacity=4, max_len=64, buckets=(8, 16),
+                            kv_backend="paged", block_size=8,
+                            sched=SchedulerConfig(max_prefill_per_step=2))
+        e.lb_id = lb_id
+        e.attach_cache_directory(d, lb_id)
+        return e
+
+    src, dst = mk(0), mk(1)
+    dst.params = src.params
+    rng = np.random.default_rng(1)
+    prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 20)]
+    src.submit(Request(rid=0, prompt=prompt,
+                       sampling=SamplingParams(max_new_tokens=12)))
+    for _ in range(6):                        # prefill + a few decode steps
+        src.step()
+    seq = src.migration_sequence(0)
+    mgr = MigrationManager()
+    ev = mgr.migrate(src, dst, 0, 0.0, 0, 1)
+    assert ev is not None
+    # the adopter's donated full blocks are immediately routable
+    ov = d.overlaps(seq + [1], 8)
+    assert ov.get(1, 0) >= 8 * (len(seq) // 8 - 1)
+    assert d.claimed(1) <= _entry_chains(dst.prefix)
+    # extraction donated the source row's blocks to the source index too
+    assert d.claimed(0) <= _entry_chains(src.prefix)
+    dst.run(max_steps=200)
+    assert len(dst.finished) == 1
+    src.prefix.check_invariants()
+    dst.prefix.check_invariants()
+
+
+@pytest.mark.slow
+def test_disagg_decode_routing_by_directory():
+    """The disaggregated decode pool routes handoffs by directory overlap:
+    same-prefix requests adopt onto the decode replica already caching the
+    sequence, and every request still completes."""
+    from repro.configs import get_config
+    from repro.core.disaggregation import DisaggConfig, DisaggregatedServer
+    from repro.serving import InferenceEngine, Request, SamplingParams
+    from repro.serving.scheduler import SchedulerConfig
+
+    cfg = get_config("qwen2-0.5b-smoke")
+
+    def mk():
+        return InferenceEngine(cfg, capacity=4, max_len=64, buckets=(8, 16),
+                               kv_backend="paged", block_size=8,
+                               sched=SchedulerConfig(max_prefill_per_step=2))
+
+    srv = DisaggregatedServer(mk, DisaggConfig(prefill_engines=1,
+                                               decode_engines=2,
+                                               lb_policy="directory"))
+    rng = np.random.default_rng(2)
+    sys_prefix = [int(x) for x in rng.integers(0, cfg.vocab_size, 16)]
+    for rid in range(6):
+        tail = [int(x) for x in rng.integers(0, cfg.vocab_size, 4)]
+        srv.submit(Request(rid=rid, prompt=sys_prefix + tail,
+                           sampling=SamplingParams(max_new_tokens=6)))
+    done = srv.run(max_steps=400)
+    assert len(done) == 6
+    assert srv.migrations.succeeded >= 1
+    # donated blocks are claimed for decode replicas only (sinks attached
+    # to the decode pool), and conservatively
+    for e in srv.decode_pool:
+        assert srv.directory.claimed(e.lb_id) <= _entry_chains(e.prefix)
+    for e in srv.prefill_pool:
+        assert srv.directory.claimed(e.lb_id) == set()
+    # once one decode replica holds the shared prefix, later handoffs
+    # rendezvous there: the prefix chains live on a single decode replica
+    holders = {r for e in srv.decode_pool
+               for r in [e.lb_id]
+               if srv.directory.overlap(r, sys_prefix + [1], 8) >= 8}
+    assert len(holders) == 1
+
+
+# ------------------------------------------------------- property (hypothesis)
+def test_directory_conservative_subset_property():
+    """Random interleavings of cache ops on two sink-attached replicas:
+    the directory's committed claims stay a conservative subset of each
+    replica's retained full blocks (hence of the union of replica caches),
+    and reconcile resynchronises exactly to the reachable view."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 1), st.integers(0, 4),
+                              st.integers(1, 40)),
+                    min_size=1, max_size=50),
+           st.integers(4, 16), st.integers(2, 4))
+    def inner(ops, num_blocks, bs):
+        d = ClusterCacheDirectory()
+        pcs = [PrefixCache(num_blocks, bs), PrefixCache(num_blocks, bs)]
+        for i, pc in enumerate(pcs):
+            pc.attach_sink(d, i)
+        rng = np.random.default_rng(0)
+        live = {0: {}, 1: {}}
+        sid = 0
+        for who, op, n in ops:
+            pc = pcs[who]
+            if op == 0:                      # allocate (may evict cached)
+                got = pc.allocate(min(n, 4))
+                if got is not None:
+                    live[who][sid] = (got, [int(x) for x in
+                                            rng.integers(0, 6, len(got) * bs)])
+                    sid += 1
+            elif op == 1 and live[who]:      # retire: insert + release
+                k = next(iter(live[who]))
+                blocks, toks = live[who].pop(k)
+                pc.insert(toks, blocks, min(len(toks), n * bs // 2 + 1))
+                pc.release(blocks)
+            elif op == 2:                    # match holds refs
+                prompt = [int(x) for x in rng.integers(0, 6, max(n, 2))]
+                blocks, hit = pc.match(prompt)
+                live[who][sid] = (blocks, prompt[:hit])
+                sid += 1
+            elif op == 3 and live[who]:      # plain release (no insert)
+                blocks, _ = live[who].pop(next(iter(live[who])))
+                pc.release(blocks)
+            elif op == 4:                    # adopt (migration path)
+                n_valid = min(n, 3 * bs - 1)
+                seq = [int(x) for x in rng.integers(0, 6, n_valid)]
+                plan = pc.adopt_blocks(seq, n_valid)
+                if plan is not None:
+                    blocks, _ = plan
+                    pc.insert(seq, blocks, (n_valid // bs) * bs)
+                    live[who][sid] = (blocks, seq)
+                    sid += 1
+            pc.check_invariants()
+            for i, p in enumerate(pcs):      # conservative subset, always
+                assert d.claimed(i) <= _entry_chains(p)
+        for who in (0, 1):                   # release everything
+            for blocks, _ in live[who].values():
+                pcs[who].release(blocks)
+        for i, p in enumerate(pcs):
+            d.reconcile(i, p.reachable_chains())
+            assert d.claimed(i) == p.reachable_chains()
+            assert d.claimed(i) <= _entry_chains(p)
+
+    inner()

@@ -1,6 +1,5 @@
 """Checkpoint/restart fault-tolerance tests."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

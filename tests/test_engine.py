@@ -1,6 +1,5 @@
 """Integration tests: continuous-batching engine, migration, microservice
 pipeline, orchestrator — real JAX models on CPU."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Unit tests for the static HLO analyzer (launch/hlo.py)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo as H

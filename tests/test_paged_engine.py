@@ -2,7 +2,6 @@
 caching (hits skip prefill, CoW on shared tails), per-block telemetry, and
 the padded/true cost-model split."""
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.serving import InferenceEngine, Request, SamplingParams

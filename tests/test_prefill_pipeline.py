@@ -7,7 +7,6 @@ arrival=0.0 scheduler semantics; kv_bytes proportional to sequence length.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config

@@ -1,5 +1,5 @@
 """Scheduler policy + admission tests."""
-from repro.serving.request import Request, SamplingParams
+from repro.serving.request import Request
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 

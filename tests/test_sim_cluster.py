@@ -1,7 +1,6 @@
 """Simulator behaviour + paper-figure validation (deliverables c, d)."""
 import pytest
 
-from repro.core.autoscaler import HPAConfig
 from repro.core.cluster import (ClusterConfig, LayerCost, SimCluster, SimJob,
                                 closed_loop, llama2_13b_a100_costs,
                                 poisson_open_loop)
