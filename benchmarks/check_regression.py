@@ -53,6 +53,17 @@ GATES: dict[str, dict[str, tuple[bool, float, float]]] = {
         "prefill_saved_vs_prefix": (True, 0.50, 0.0),
         "directory.mean_ttft_steps": (False, 0.25, 0.5),
     },
+    # the stream sweep runs on the logical step clock, so TTFT percentiles
+    # and goodput are seed-deterministic and gateable (unlike the wall-clock
+    # TTFT seconds of the other modes)
+    "stream": {
+        "stream_equal_frac": (True, 0.0, 0.0),       # exact: 1.0 or broken
+        "qps_3p0.served": (True, 0.0, 0.0),
+        "qps_3p0.slo_goodput": (True, 0.05, 0.0),
+        "qps_3p0.ttft_p90_steps": (False, 0.15, 1.0),
+        "qps_1p5.ttft_p90_steps": (False, 0.15, 1.0),
+        "goodput_gain_vs_fcfs": (True, 0.0, 0.05),
+    },
 }
 
 

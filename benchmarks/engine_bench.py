@@ -426,6 +426,172 @@ def run_directory(arch: str = "qwen2-0.5b-smoke", n_requests: int = 48,
     return results
 
 
+def _poisson_trace(cfg, rng, n: int, qps: float,
+                   interactive_frac: float = 0.7) -> list[dict]:
+    """Open-loop arrival spec on the logical step clock: Poisson arrivals at
+    ``qps`` requests per step, two SLO classes — interactive (short prompt,
+    tight TTFT deadline) and batch (long chunked prompt, loose deadline)."""
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, n))
+    spec = []
+    for i in range(n):
+        interactive = bool(rng.random() < interactive_frac)
+        ln = int(rng.integers(4, 28)) if interactive \
+            else int(rng.integers(40, 72))
+        spec.append({
+            "arrival": float(arrivals[i]),
+            "prompt": [int(x) for x in rng.integers(0, cfg.vocab_size, ln)],
+            "interactive": interactive,
+        })
+    return spec
+
+
+def _mk_stream_reqs(spec: list[dict]) -> list:
+    """Materialise fresh Request objects from a trace spec (requests are
+    mutated by serving, so every engine run gets its own copies)."""
+    reqs = []
+    for i, s in enumerate(spec):
+        tight = s["interactive"]
+        r = Request(rid=i, prompt=list(s["prompt"]),
+                    sampling=SamplingParams(
+                        max_new_tokens=8 if tight else 16),
+                    slo_ttft=12.0 if tight else 120.0,
+                    slo_tpot=3.0 if tight else 6.0)
+        r.arrival = s["arrival"]
+        reqs.append(r)
+    return reqs
+
+
+def _stream_sweep(eng, reqs: list, n_total: int,
+                  max_steps: float = 5000.0) -> dict:
+    """Open-loop serve: submit each request at its arrival step, stream
+    every token through the event demux, report per-request latency
+    percentiles and SLO goodput.  All metrics live on the logical step
+    clock, so a pinned seed makes them bit-reproducible (CI gates them)."""
+    from repro.serving import FirstTokenEvent, State, StreamDemux
+
+    eng.finished = []
+    eng.history.clear()
+    demux = StreamDemux()
+    streamed: dict[int, list[int]] = {}
+    first: dict[int, float] = {}
+    i, t, qpeak, preempts = 0, 0.0, 0, 0
+    while (i < len(reqs) or eng.pending()) and t < max_steps:
+        while i < len(reqs) and reqs[i].arrival <= t:
+            eng.submit(reqs[i], now=t)
+            i += 1
+        st = eng.step(now=t)
+        preempts += st.preempted
+        qpeak = max(qpeak, st.queue_depth)
+        for ev in st.events:
+            if isinstance(ev, FirstTokenEvent):
+                first[ev.rid] = ev.t
+        for tok in demux.feed(st.events):
+            streamed.setdefault(tok.rid, []).append(tok.token)
+        t += 1.0
+    done = eng.finished
+    rejected = [r for r in reqs if r.state is State.REJECTED]
+    ttfts = sorted(first[r.rid] - r.arrival for r in done if r.rid in first)
+    tpots = [r.tpot for r in done if r.tpot is not None]
+
+    def pct(xs, p):
+        return float(np.percentile(xs, p)) if xs else 0.0
+
+    return {
+        "served": len(done),
+        "rejected": len(rejected),
+        "tokens": sum(len(r.output) for r in done),
+        "ttft_p50_steps": pct(ttfts, 50),
+        "ttft_p90_steps": pct(ttfts, 90),
+        "ttft_p99_steps": pct(ttfts, 99),
+        "tpot_p50_steps": pct(tpots, 50),
+        "tpot_p90_steps": pct(tpots, 90),
+        "slo_goodput": sum(1 for r in done if r.slo_met()) / max(n_total, 1),
+        "queue_peak": qpeak,
+        "preemptions": preempts,
+        "steps": t,
+        "stream_equal": sum(1 for r in done
+                            if streamed.get(r.rid, []) == r.output),
+    }
+
+
+def run_stream(arch: str = "qwen2-0.5b-smoke", n_requests: int = 32,
+               capacity: int = 8, seed: int = 0, verbose: bool = True,
+               strict: bool = True,
+               qps_list: tuple[float, ...] = (0.5, 1.5, 3.0)) -> dict:
+    """Open-loop streaming bench: Poisson arrivals swept to saturation.
+
+    A mixed interactive/batch trace (70% short prompts with tight TTFT
+    SLOs, 30% long chunked prompts with loose ones) arrives at increasing
+    QPS on the logical step clock.  Every token is consumed through the
+    typed event stream (the completions front-end's data path) and checked
+    byte-identical against the final ``Request.output``.  The EDF scheduler
+    (policy="slo", with the decode-pressure guard armed) is swept across
+    all rates; FCFS serves the same top-rate trace for the goodput
+    comparison — under overload, deadline ordering should keep more
+    interactive requests inside their TTFT budget."""
+    cfg = get_config(arch)
+    results: dict = {}
+    traces = {}
+    for qps in qps_list:
+        rng = np.random.default_rng([seed, int(round(qps * 10))])
+        traces[qps] = _poisson_trace(cfg, rng, n_requests, qps)
+
+    def mk(policy):
+        return InferenceEngine(
+            cfg, capacity=capacity, max_len=96, buckets=(16, 32),
+            sched=SchedulerConfig(policy=policy, max_prefill_per_step=4,
+                                  slo_guard=(policy == "slo")),
+            seed=seed)
+
+    edf = mk("slo")
+    _warm(edf, cfg)
+    eq, total_served = 0, 0
+    for qps in qps_list:
+        key = f"qps_{qps}".replace(".", "p")
+        res = _stream_sweep(edf, _mk_stream_reqs(traces[qps]), n_requests)
+        eq += res["stream_equal"]
+        total_served += res["served"]
+        results[key] = res
+    top = qps_list[-1]
+    fcfs = mk("fcfs")
+    _warm(fcfs, cfg)
+    res = _stream_sweep(fcfs, _mk_stream_reqs(traces[top]), n_requests)
+    eq += res["stream_equal"]
+    total_served += res["served"]
+    results[f"fcfs_qps_{top}".replace(".", "p")] = res
+
+    top_key = f"qps_{top}".replace(".", "p")
+    results["stream_equal_frac"] = eq / max(total_served, 1)
+    results["goodput_gain_vs_fcfs"] = (results[top_key]["slo_goodput"]
+                                       - res["slo_goodput"])
+    if verbose:
+        for qps in qps_list:
+            key = f"qps_{qps}".replace(".", "p")
+            print(f"--- edf @ {qps} req/step ---")
+            for k, v in results[key].items():
+                print(f"{k}: {v}")
+        print(f"--- fcfs @ {top} req/step ---")
+        for k, v in res.items():
+            print(f"{k}: {v}")
+        print(f"stream == output for {eq}/{total_served} requests")
+        print(f"goodput gain (edf - fcfs) at {top} req/step: "
+              f"{results['goodput_gain_vs_fcfs']:.3f}")
+    checks = [
+        (results["stream_equal_frac"] == 1.0,
+         "streamed tokens diverged from Request.output"),
+        (all(results[f"qps_{q}".replace('.', 'p')]["served"]
+             + results[f"qps_{q}".replace('.', 'p')]["rejected"]
+             == n_requests for q in qps_list),
+         "requests lost (served + rejected != submitted)"),
+        (results["goodput_gain_vs_fcfs"] >= 0.0,
+         "EDF scheduling lost goodput to FCFS under overload"),
+    ]
+    results["check_failures"] = [msg for ok, msg in checks if not ok]
+    if strict and results["check_failures"]:
+        raise AssertionError("; ".join(results["check_failures"]))
+    return results
+
+
 def run(arch: str = "qwen2-0.5b-smoke", n_requests: int = 24,
         capacity: int = 8, seed: int = 0, verbose: bool = True) -> dict:
     cfg = get_config(arch)
@@ -469,14 +635,17 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode",
-                    choices=["pipeline", "paged", "migrate", "directory"],
+                    choices=["pipeline", "paged", "migrate", "directory",
+                             "stream"],
                     default="pipeline",
                     help="pipeline: batched/chunked prefill vs single-prefill; "
                          "paged: paged+prefix-cache backend vs dense rows; "
                          "migrate: paged scale-down drain, live block-table "
                          "migration vs attrition; directory: cluster "
                          "cache-directory routing vs prefix affinity vs p2c "
-                         "under autoscaling churn")
+                         "under autoscaling churn; stream: open-loop Poisson "
+                         "QPS sweep through the per-token event stream, "
+                         "TTFT/TPOT percentiles and SLO goodput, EDF vs FCFS")
     ap.add_argument("--n", type=int, default=None,
                     help="requests (default: per-mode)")
     ap.add_argument("--seed", type=int, default=0,
@@ -487,11 +656,12 @@ if __name__ == "__main__":
                     help="write the result dict as JSON (CI artifact)")
     args = ap.parse_args()
     fn = {"paged": run_paged, "migrate": run_migrate,
-          "pipeline": run, "directory": run_directory}[args.mode]
+          "pipeline": run, "directory": run_directory,
+          "stream": run_stream}[args.mode]
     kwargs = {"seed": args.seed}
     if args.n is not None:
         kwargs["n_requests"] = args.n
-    if args.mode == "directory":
+    if args.mode in ("directory", "stream"):
         kwargs["strict"] = False     # report failures after writing the json
     res = fn(**kwargs)
     if args.json:

@@ -79,6 +79,10 @@ class DisaggregatedServer:
         self.migrations = MigrationManager(cfg.migration)
         self.finished: list[Request] = []
         self.history: list[DisaggStepStats] = []
+        # pool-wide event stream: prefill-engine first tokens, handoff
+        # preempts, decode-engine tokens/finishes — one per-request stream
+        # across the prefill->decode migration (serving/api.py consumes it)
+        self.events: list = []
 
     def submit(self, req: Request, now: float | None = None) -> None:
         now = time.perf_counter() if now is None else now
@@ -103,7 +107,8 @@ class DisaggregatedServer:
         now = time.perf_counter() if now is None else now
         a0, s0 = self.migrations.attempted, self.migrations.succeeded
         for pi, pe in enumerate(self.prefill_pool):
-            pe.step(now)
+            st = pe.step(now)
+            self.events.extend(st.events)
             for req in self._handoff_ready(pe):
                 # KV pressure is the real decode-pool signal: occupied rows
                 # under-count on paged engines, whose cost is mapped blocks.
@@ -122,14 +127,22 @@ class DisaggregatedServer:
                                         src_idx=pi,
                                         dst_idx=len(self.prefill_pool)
                                         + self.decode_pool.index(dst))
+            # handoff preempts were emitted on the prefill engine between
+            # steps; keep them ordered before the decode pool's tokens
+            self.events.extend(pe.drain_events())
         for de in self.decode_pool:
-            de.step(now)
+            self.events.extend(de.step(now).events)
         att = self.migrations.attempted - a0
         ok = self.migrations.succeeded - s0
         st = DisaggStepStats(t=now, handoffs_attempted=att,
                              handoffs_succeeded=ok, handoffs_failed=att - ok)
         self.history.append(st)
         return st
+
+    def drain_events(self) -> list:
+        """Return and clear the pool-wide event stream."""
+        ev, self.events = self.events, []
+        return ev
 
     def pending(self) -> int:
         return sum(e.pending() for e in self.prefill_pool + self.decode_pool)

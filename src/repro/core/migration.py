@@ -16,6 +16,7 @@ import dataclasses
 from typing import Sequence
 
 from repro.serving.engine import InferenceEngine
+from repro.serving.events import PreemptEvent
 from repro.serving.request import State
 
 
@@ -141,7 +142,7 @@ class MigrationManager:
             # a drain loop can retry every tick at O(1) cost
             self._fail(now, rid, src_idx, dst_idx, "dst-full")
             return None
-        req, payload = src.extract_row(rid)
+        req, payload = src.extract_row(rid, now=now)
         if not dst.adopt(req, payload, now):
             if src.adopt(req, payload, now):
                 self._fail(now, rid, src_idx, dst_idx, "dst-full")
@@ -156,7 +157,12 @@ class MigrationManager:
                 req.token_times.clear()
                 req.t_first_token = None
                 req.t_admit = None
+                req.preemptions += 1
                 src.scheduler.queue.append(req)
+                # stream consumers: earlier token indices will be re-emitted
+                # by whichever replica re-serves this request — the demux
+                # drops them, keeping downstream streams append-only
+                src.emit_event(PreemptEvent(t=now, rid=rid, reason="requeued"))
                 self._fail(now, rid, src_idx, dst_idx, "requeued")
             return None
         ev = MigrationEvent(now, rid, src_idx, dst_idx, nbytes,

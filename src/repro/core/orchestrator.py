@@ -74,6 +74,11 @@ class Orchestrator:
         self.scale_history: list[tuple[float, int]] = []
         # requests that completed on replicas since retired by scale-down
         self.finished: list[Request] = []
+        # cluster-wide event stream: every replica's per-step events plus
+        # migration transitions, in step order — a migrated request's tokens
+        # keep flowing here from its new replica with no gap.  Consumers
+        # (serving/api.py, benches) take them via drain_events().
+        self.events: list = []
 
     def _spawn(self) -> InferenceEngine:
         """Create a replica with a stable monotonic identity: prefix-affinity
@@ -149,6 +154,9 @@ class Orchestrator:
             if removed:
                 for i in removed:      # a retired replica's served requests
                     self.finished.extend(self.engines[i].finished)
+                    # harvest the victim's last events (drain-migration
+                    # preempts) before its engine object is dropped
+                    self.events.extend(self.engines[i].drain_events())
                     # scale-down invalidation: the departing replica's pool
                     # dies with it — the directory must stop routing to it.
                     # drop_replica directly (not only via the sink detach):
@@ -212,6 +220,7 @@ class Orchestrator:
                 self._cold[i] -= 1
                 continue
             st = eng.step(now)
+            self.events.extend(st.events)
             self.profiler.observe_latency(f"engine/{i}/decode", now, st.decode_s)
             self.profiler.observe_util(f"engine/{i}/kv", now, st.kv_util)
             if st.prefill_tokens:
@@ -227,6 +236,16 @@ class Orchestrator:
         self._steps += 1
         if self._steps % self.cfg.control_every_steps == 0:
             self._control(now)
+            # migrations during the control tick emitted on their source
+            # engines between steps; surface them in cluster step order
+            for e in self.engines:
+                self.events.extend(e.drain_events())
+
+    def drain_events(self) -> list:
+        """Return and clear the cluster event stream (cross-replica, in
+        step order; migration preempts included)."""
+        ev, self.events = self.events, []
+        return ev
 
     def pending(self) -> int:
         return sum(e.pending() for e in self.engines)

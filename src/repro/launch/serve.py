@@ -2,7 +2,12 @@
 production-mesh serve-step dry-run.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --requests 12
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --stream
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-27b --dryrun
+
+``--stream`` serves through the OpenAI-style completions front-end
+(serving/api.py) and prints SSE frames as tokens are emitted — per-token
+streaming over the cluster, migrations included.
 """
 from __future__ import annotations
 
@@ -12,12 +17,98 @@ import sys
 import numpy as np
 
 
+def _build_orchestrator(args, cfg):
+    from repro.core.autoscaler import HPAConfig
+    from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+    from repro.serving import InferenceEngine
+
+    return Orchestrator(
+        lambda: InferenceEngine(cfg, capacity=args.capacity, max_len=64,
+                                buckets=(8, 16), seed=7),
+        OrchestratorConfig(hpa=HPAConfig(metric="queue", target=3.0,
+                                         max_replicas=args.max_replicas,
+                                         tolerance=0.0, stabilization_s=2.0)))
+
+
+def _report(done, rejected, total, n_replicas, n_migrations) -> bool:
+    """Success = every request accounted for; REJECTED requests are an
+    explicit outcome reported on their own line, never silently folded
+    into the served count."""
+    print(f"served {len(done)}/{total} requests on {n_replicas} replicas "
+          f"({n_migrations} migrations)")
+    if rejected:
+        print(f"rejected {len(rejected)}/{total} requests "
+              f"(rids: {sorted(r.rid for r in rejected)})")
+    for r in done[:4]:
+        print(f"  rid={r.rid} ttft={r.ttft:.2f}s tokens={len(r.output)} "
+              f"finish={r.finish_reason}")
+    return len(done) + len(rejected) == total
+
+
+def _serve_batch(args, cfg) -> int:
+    from repro.serving import Request, SamplingParams, State
+
+    orch = _build_orchestrator(args, cfg)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        reqs.append(Request(
+            rid=i,
+            prompt=[int(x) for x in rng.integers(0, cfg.vocab_size,
+                                                 int(rng.integers(4, 14)))],
+            sampling=SamplingParams(max_new_tokens=6, temperature=0.7,
+                                    top_k=40)))
+        orch.submit(reqs[-1])
+    done = orch.run(max_steps=800)
+    rejected = [r for r in reqs if r.state is State.REJECTED]
+    ok = _report(done, rejected, args.requests, len(orch.engines),
+                 len(orch.migrations.events))
+    return 0 if ok else 1
+
+
+def _serve_stream(args, cfg) -> int:
+    """Per-token streaming demo: interleaved SSE streams over the cluster
+    front-end, printed as frames arrive."""
+    from repro.serving import SSE_DONE, CompletionRequest, CompletionsAPI
+
+    orch = _build_orchestrator(args, cfg)
+    api = CompletionsAPI(orch, model=args.arch)
+    rng = np.random.default_rng(0)
+    n = min(args.requests, 4)        # a readable number of live streams
+    gens = []
+    for _ in range(n):
+        creq = CompletionRequest(
+            prompt=[int(x) for x in rng.integers(0, cfg.vocab_size,
+                                                 int(rng.integers(4, 14)))],
+            max_tokens=6, temperature=0.7, top_k=40, stream=True)
+        gens.append(api.stream(creq, now=0.0))
+    live, finished = list(gens), 0
+    while live:                      # round-robin: frames interleave
+        for g in list(live):
+            try:
+                chunk = next(g)
+            except StopIteration:
+                live.remove(g)
+                continue
+            sys.stdout.write(chunk.to_sse())
+            if chunk.choices[0]["finish_reason"] is not None:
+                finished += 1 if chunk.choices[0]["finish_reason"] != \
+                    "rejected" else 0
+                sys.stdout.write(SSE_DONE)
+    print(f"streamed {finished}/{n} requests to completion on "
+          f"{len(orch.engines)} replicas")
+    return 0 if finished == n else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--capacity", type=int, default=4)
     ap.add_argument("--max-replicas", type=int, default=3)
+    ap.add_argument("--stream", action="store_true",
+                    help="serve through the completions front-end and print "
+                         "per-token SSE frames")
     ap.add_argument("--dryrun", action="store_true",
                     help="lower+compile the production decode step and exit")
     ap.add_argument("--perf", nargs="*", default=[])
@@ -30,32 +121,10 @@ def main(argv=None):
                        (["--perf"] + args.perf if args.perf else []))
 
     from repro.configs import get_config
-    from repro.core.autoscaler import HPAConfig
-    from repro.core.orchestrator import Orchestrator, OrchestratorConfig
-    from repro.serving import InferenceEngine, Request, SamplingParams
-
     cfg = get_config(args.arch + "-smoke")
-    orch = Orchestrator(
-        lambda: InferenceEngine(cfg, capacity=args.capacity, max_len=64,
-                                buckets=(8, 16), seed=7),
-        OrchestratorConfig(hpa=HPAConfig(metric="queue", target=3.0,
-                                         max_replicas=args.max_replicas,
-                                         tolerance=0.0, stabilization_s=2.0)))
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        orch.submit(Request(
-            rid=i,
-            prompt=[int(x) for x in rng.integers(0, cfg.vocab_size,
-                                                 int(rng.integers(4, 14)))],
-            sampling=SamplingParams(max_new_tokens=6, temperature=0.7,
-                                    top_k=40)))
-    done = orch.run(max_steps=800)
-    print(f"served {len(done)}/{args.requests} requests on "
-          f"{len(orch.engines)} replicas "
-          f"({len(orch.migrations.events)} migrations)")
-    for r in done[:4]:
-        print(f"  rid={r.rid} ttft={r.ttft:.2f}s tokens={len(r.output)}")
-    return 0 if len(done) == args.requests else 1
+    if args.stream:
+        return _serve_stream(args, cfg)
+    return _serve_batch(args, cfg)
 
 
 if __name__ == "__main__":

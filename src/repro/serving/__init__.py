@@ -1,4 +1,9 @@
+from repro.serving.api import (SSE_DONE, CompletionChunk,  # noqa: F401
+                               CompletionRequest, CompletionResponse,
+                               CompletionsAPI, StreamDemux)
 from repro.serving.engine import InferenceEngine, StepStats  # noqa: F401
+from repro.serving.events import (EngineEvent, FinishEvent,  # noqa: F401
+                                  FirstTokenEvent, PreemptEvent, TokenEvent)
 from repro.serving.prefix_cache import PrefixCache  # noqa: F401
 from repro.serving.request import Request, SamplingParams, State  # noqa: F401
 from repro.serving.scheduler import Scheduler, SchedulerConfig  # noqa: F401

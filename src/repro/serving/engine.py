@@ -36,11 +36,13 @@ from repro.configs.base import ModelConfig
 from repro.configs.perf import BASELINE, PerfConfig
 from repro.models import params as P
 from repro.models.lm import make_model
+from repro.serving.events import (EngineEvent, FinishEvent, FirstTokenEvent,
+                                  PreemptEvent, TokenEvent)
 from repro.serving.kv_cache import RowPool
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, State
 from repro.serving.sampling import make_sampler
-from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.scheduler import Scheduler, SchedulerConfig, deadline_risk
 
 
 def _round_bucket(n: int, buckets: tuple[int, ...]) -> int:
@@ -74,6 +76,11 @@ class StepStats:
     kv_blocks_cached: int = 0       # blocks retained by the prefix index
     kv_util: float = 0.0            # live-block (paged) / row (dense) fraction
     kv_frag: float = 0.0            # wasted tail-of-block slots / allocated
+    # per-request events this step emitted (serving/events.py): every output
+    # token, first tokens, finishes, preemptions — the streaming front-end
+    # and the control plane consume these instead of per-step aggregates
+    events: list[EngineEvent] = dataclasses.field(default_factory=list)
+    preempted: int = 0              # rows displaced by the SLO guard this step
 
 
 class InferenceEngine:
@@ -179,6 +186,14 @@ class InferenceEngine:
                                        donate_argnums=(0,))
         self.history: list[StepStats] = []
         self.finished: list[Request] = []
+        # event stream (serving/events.py): appended by every request-visible
+        # transition, drained into StepStats.events at the end of each step.
+        # Out-of-step emissions (migration extract/requeue between steps) are
+        # picked up by the next drain — the orchestrator drains explicitly
+        # after its control tick so scale-down victims' events are not lost.
+        self._pending_events: list[EngineEvent] = []
+        self._risk_streak = 0       # consecutive SLO-guard-risky steps
+        self.preemptions = 0        # rows displaced by the SLO guard (total)
 
     # ------------------------------------------------------------- internals
     def _insert_rows_impl(self, pool_tree, new_tree, rows):
@@ -435,6 +450,7 @@ class InferenceEngine:
             new_tokens[row, 0] = t
             self._set_row_sampling(row, req)
             self.row_req[row] = req
+            self._emit_first_token(req, t, now)
             self._maybe_finish_first(row, req, now)
         self.tokens = jnp.asarray(new_tokens)
         return sum(len(r.prompt) for r in reqs)
@@ -544,12 +560,15 @@ class InferenceEngine:
             del self._consumed[row]
             t = int(sampled[row])
             req.output.append(t)
+            # a migrated-in decode-phase row resuming here never re-samples
+            # its first token; chunk completions are always first tokens
             req.t_first_token = now
             req.token_times.append(now)
             req.state = State.DECODE
             self.pos[row] = len(req.prompt)
             new_tokens[row, 0] = t
             self.row_req[row] = req
+            self._emit_first_token(req, t, now)
             self._maybe_finish_first(row, req, now)
         self.tokens = jnp.asarray(new_tokens)
 
@@ -568,10 +587,61 @@ class InferenceEngine:
         req.state = State.DONE
         req.t_finish = now
         req.row = None
+        stop = req.sampling.stop_token
+        req.finish_reason = ("stop" if stop is not None and req.output
+                             and req.output[-1] == stop else "length")
         if self.paged:
             self._release_row(row, req, insert=True)
         self.pool.free(row)
         self.finished.append(req)
+        self.emit_event(FinishEvent(t=now, rid=req.rid,
+                                    reason=req.finish_reason,
+                                    n_tokens=len(req.output)))
+
+    # ------------------------------------------------------------- events
+    def emit_event(self, ev: EngineEvent) -> None:
+        """Append to the engine's event stream (drained into the next
+        ``StepStats.events``).  Public so the migration layer can record
+        handoff/rollback transitions against the engine they happened on."""
+        self._pending_events.append(ev)
+
+    def drain_events(self) -> list[EngineEvent]:
+        """Return and clear the pending event stream.  ``step()`` drains
+        into its StepStats; callers that mutate the engine *between* steps
+        (migration, scale-down drains) drain explicitly afterwards."""
+        ev, self._pending_events = self._pending_events, []
+        return ev
+
+    def _emit_first_token(self, req: Request, token: int, now: float) -> None:
+        self.emit_event(FirstTokenEvent(t=now, rid=req.rid, token=token,
+                                        index=0))
+
+    # --------------------------------------------------------- SLO preempt
+    def _preempt_freshest_prefill(self, now: float) -> bool:
+        """Displace the most recently admitted mid-prefill row back to the
+        queue head (deadline-risk decode rows outrank fresh prefill work).
+        On the paged backend its consumed-prefix blocks are donated to the
+        prefix index first, so re-admission is mostly cache hits; a dense
+        row restarts its prefill from scratch."""
+        if not self._prefilling:
+            return False
+        row = next(reversed(self._prefilling))      # insertion order = age
+        req = self._prefilling.pop(row)
+        self._consumed.pop(row, None)
+        self._fresh.discard(row)
+        if self.paged:
+            self._release_row(row, req, insert=True)
+        self.pool.free(row)
+        self.pos[row] = 0
+        req.state = State.QUEUED
+        req.row = None
+        req.t_admit = None
+        req.preemptions += 1
+        self.preemptions += 1
+        self.scheduler.queue.appendleft(req)
+        self.emit_event(PreemptEvent(t=now, rid=req.rid,
+                                     reason="slo-decode-pressure"))
+        return True
 
     # ------------------------------------------------------------------ step
     def step(self, now: float | None = None) -> StepStats:
@@ -588,6 +658,21 @@ class InferenceEngine:
         if self.paged:
             self._hit_tokens_step = 0
 
+        # 0. SLO guard: decode rows at TPOT-deadline risk displace fresh
+        # prefill work — no new admissions while any row is at risk, and a
+        # persistent streak preempts the freshest mid-prefill row so the
+        # next steps' chunk work shrinks
+        scfg = self.scheduler.cfg
+        at_risk: list[Request] = []
+        preempted = 0
+        if scfg.slo_guard:
+            at_risk = deadline_risk(self.row_req.values(),
+                                    scfg.slo_guard_margin)
+            self._risk_streak = self._risk_streak + 1 if at_risk else 0
+            if at_risk and self._risk_streak >= scfg.slo_guard_patience:
+                if self._preempt_freshest_prefill(now):
+                    preempted = 1
+
         # 1. continue in-flight chunked prefills (admission order); the
         # oldest row always advances so progress is never starved
         rows_n: dict[int, int] = {}
@@ -600,9 +685,10 @@ class InferenceEngine:
             prefill_tokens += n
             prefill_padded += n if self.paged else self.chunk
 
-        # 2. admission under the remaining budget
+        # 2. admission under the remaining budget (withheld entirely while
+        # the SLO guard sees deadline-risk decode rows)
         incoming: list[Request] = []
-        if remaining > 0:
+        if remaining > 0 and not at_risk:
             free = self.capacity - self.pool.used
             incoming = self.scheduler.next_batch(
                 free, now, budget=None if budget is None else int(remaining),
@@ -688,6 +774,8 @@ class InferenceEngine:
                 tokens_out += 1
                 self.pos[row] += 1
                 new_tokens[row, 0] = t
+                self.emit_event(TokenEvent(t=now, rid=req.rid, token=t,
+                                           index=len(req.output) - 1))
                 stop = req.sampling.stop_token
                 if (len(req.output) >= req.sampling.max_new_tokens
                         or (stop is not None and t == stop)
@@ -700,7 +788,8 @@ class InferenceEngine:
                        queue_depth=self.scheduler.depth(), tokens_out=tokens_out,
                        prefill_tokens=prefill_tokens, chunk_rows=len(rows_n),
                        prefill_tokens_padded=prefill_padded,
-                       prefill_tokens_true=prefill_tokens)
+                       prefill_tokens_true=prefill_tokens,
+                       events=self.drain_events(), preempted=preempted)
         if self.paged:
             alloc = sum(len(b) for b in self._row_blocks.values()) \
                 * self.block_size
@@ -798,7 +887,7 @@ class InferenceEngine:
             out.append(pool.at[idx].set(sl.astype(pool.dtype)))
         self.caches = jax.tree.unflatten(jax.tree.structure(self.caches), out)
 
-    def extract_row(self, rid: int):
+    def extract_row(self, rid: int, now: float | None = None):
         """Remove a live request, returning its migration payload
         (Llumnix-style pause-and-copy handoff).  Works for decode rows and
         for mid-chunked-prefill rows at their current chunk boundary — the
@@ -845,6 +934,9 @@ class InferenceEngine:
         req.row = None
         req.migrations += 1
         self.pool.free(row)
+        self.emit_event(PreemptEvent(
+            t=time.perf_counter() if now is None else now,
+            rid=rid, reason="migrate"))
         return req, payload
 
     def _adopt_paged(self, req: Request, payload: dict, row: int) -> bool:

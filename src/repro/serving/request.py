@@ -44,7 +44,9 @@ class Request:
     row: int | None = None                  # engine batch slot
     replica: int | None = None              # control-plane placement
     migrations: int = 0
+    preemptions: int = 0                    # times displaced from a row pre-finish
     prefix_hit_tokens: int = 0              # prompt tokens served from KV cache
+    finish_reason: str | None = None        # "stop" | "length" (OpenAI-style)
 
     # ------------------------------------------------------------ metrics
     @property
@@ -70,8 +72,15 @@ class Request:
         return self.state in (State.DONE, State.REJECTED)
 
     def slo_met(self) -> bool:
-        if self.slo_ttft is not None and (self.ttft or 1e30) > self.slo_ttft:
-            return False
-        if self.slo_tpot is not None and (self.tpot or 0.0) > self.slo_tpot:
-            return False
+        # explicit None checks: ``ttft == 0.0`` (first token in the arrival
+        # step under a logical clock) and ``tpot == 0.0`` are legitimate
+        # values — ``(x or default)`` would misread both as "missing"
+        if self.slo_ttft is not None:
+            ttft = self.ttft if self.ttft is not None else 1e30
+            if ttft > self.slo_ttft:
+                return False
+        if self.slo_tpot is not None:
+            tpot = self.tpot if self.tpot is not None else 0.0
+            if tpot > self.slo_tpot:
+                return False
         return True

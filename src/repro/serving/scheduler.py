@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable
+from typing import Callable, Iterable
 
 from repro.serving.request import Request, State
 
@@ -36,6 +36,29 @@ class SchedulerConfig:
     # including bucket/chunk padding (what a step actually costs), "true" =
     # prompt tokens only (what the request actually needs)
     budget_counts: str = "padded"
+    # SLO guard: when a running decode row's observed TPOT is at deadline
+    # risk (>= slo_tpot * margin), the engine withholds *new* prefill
+    # admissions, and after ``patience`` consecutive risky steps preempts
+    # the freshest mid-prefill row back to the queue head — a deadline-risk
+    # decode displaces a fresh prefill instead of queueing behind it
+    slo_guard: bool = False
+    slo_guard_margin: float = 1.0
+    slo_guard_patience: int = 2
+
+
+def deadline_risk(running: Iterable[Request], margin: float = 1.0) -> list[Request]:
+    """Decode-phase requests whose observed TPOT is at (or past) their
+    ``slo_tpot`` deadline, scaled by ``margin`` (< 1.0 flags risk *before*
+    the SLO is violated).  Requests without a TPOT SLO, or without two
+    tokens yet, carry no measurable risk."""
+    out = []
+    for r in running:
+        if r.slo_tpot is None:
+            continue
+        tpot = r.tpot
+        if tpot is not None and tpot >= r.slo_tpot * margin:
+            out.append(r)
+    return out
 
 
 class Scheduler:
