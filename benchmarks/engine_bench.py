@@ -517,7 +517,9 @@ def _stream_sweep(eng, reqs: list, n_total: int,
 def run_stream(arch: str = "qwen2-0.5b-smoke", n_requests: int = 32,
                capacity: int = 8, seed: int = 0, verbose: bool = True,
                strict: bool = True,
-               qps_list: tuple[float, ...] = (0.5, 1.5, 3.0)) -> dict:
+               qps_list: tuple[float, ...] = (0.5, 1.5, 3.0),
+               trace: bool = False, trace_out: str | None = None,
+               metrics_out: str | None = None) -> dict:
     """Open-loop streaming bench: Poisson arrivals swept to saturation.
 
     A mixed interactive/batch trace (70% short prompts with tight TTFT
@@ -536,26 +538,55 @@ def run_stream(arch: str = "qwen2-0.5b-smoke", n_requests: int = 32,
         rng = np.random.default_rng([seed, int(round(qps * 10))])
         traces[qps] = _poisson_trace(cfg, rng, n_requests, qps)
 
+    # tracing is observational only: the engines always carry a tracer, so
+    # --trace merely shares one across sweeps and exports it — the gated
+    # serving metrics are bit-identical with it on or off
+    tracer = registry = None
+    if trace or trace_out or metrics_out:
+        from repro.core.metrics import MetricsRegistry
+        from repro.core.tracing import Tracer, attribute_slo_misses
+        tracer, registry = Tracer(), MetricsRegistry()
+
     def mk(policy):
-        return InferenceEngine(
+        eng = InferenceEngine(
             cfg, capacity=capacity, max_len=96, buckets=(16, 32),
             sched=SchedulerConfig(policy=policy, max_prefill_per_step=4,
                                   slo_guard=(policy == "slo")),
-            seed=seed)
+            seed=seed, tracer=tracer, metrics=registry)
+        if registry is not None:    # label the two engines apart
+            eng.lb_id = {"slo": 0, "fcfs": 1}[policy]
+            eng.set_metrics(registry)
+        return eng
+
+    # rids 0..n are reused by every sweep, so SLO-miss attribution must be
+    # pulled from the live traces sweep-by-sweep, before the next sweep's
+    # start_trace archives them
+    attribution: list[dict] = []
+
+    def _attribute(key, reqs_run):
+        if tracer is None:
+            return
+        for row in attribute_slo_misses(tracer, reqs_run):
+            row["sweep"] = key
+            attribution.append(row)
 
     edf = mk("slo")
     _warm(edf, cfg)
     eq, total_served = 0, 0
     for qps in qps_list:
         key = f"qps_{qps}".replace(".", "p")
-        res = _stream_sweep(edf, _mk_stream_reqs(traces[qps]), n_requests)
+        reqs_run = _mk_stream_reqs(traces[qps])
+        res = _stream_sweep(edf, reqs_run, n_requests)
+        _attribute(key, reqs_run)
         eq += res["stream_equal"]
         total_served += res["served"]
         results[key] = res
     top = qps_list[-1]
     fcfs = mk("fcfs")
     _warm(fcfs, cfg)
-    res = _stream_sweep(fcfs, _mk_stream_reqs(traces[top]), n_requests)
+    reqs_run = _mk_stream_reqs(traces[top])
+    res = _stream_sweep(fcfs, reqs_run, n_requests)
+    _attribute(f"fcfs_qps_{top}".replace(".", "p"), reqs_run)
     eq += res["stream_equal"]
     total_served += res["served"]
     results[f"fcfs_qps_{top}".replace(".", "p")] = res
@@ -586,6 +617,23 @@ def run_stream(arch: str = "qwen2-0.5b-smoke", n_requests: int = 32,
         (results["goodput_gain_vs_fcfs"] >= 0.0,
          "EDF scheduling lost goodput to FCFS under overload"),
     ]
+    if tracer is not None:
+        from repro.core.tracing import format_attribution
+        results["slo_miss_attribution"] = attribution
+        results["trace_errors"] = tracer.verify()
+        checks.append((not results["trace_errors"],
+                       "trace integrity violated: "
+                       + "; ".join(results["trace_errors"][:3])))
+        if verbose:
+            print(format_attribution(attribution))
+        if trace_out:
+            tracer.write_chrome_trace(trace_out)
+            print(f"wrote {trace_out} "
+                  f"({sum(1 for _ in tracer.traces())} traces)")
+        if metrics_out:
+            with open(metrics_out, "w") as f:
+                f.write(registry.render())
+            print(f"wrote {metrics_out}")
     results["check_failures"] = [msg for ok, msg in checks if not ok]
     if strict and results["check_failures"]:
         raise AssertionError("; ".join(results["check_failures"]))
@@ -654,6 +702,12 @@ if __name__ == "__main__":
                          "bit-reproducible (the CI regression gate pins it)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the result dict as JSON (CI artifact)")
+    ap.add_argument("--trace", action="store_true",
+                    help="(stream mode) share one request-lifecycle tracer "
+                         "and metrics registry across the sweep: writes "
+                         "TRACE_stream.json (Chrome/Perfetto trace events) "
+                         "and METRICS_stream.prom (Prometheus text "
+                         "exposition), prints the SLO-miss attribution table")
     args = ap.parse_args()
     fn = {"paged": run_paged, "migrate": run_migrate,
           "pipeline": run, "directory": run_directory,
@@ -663,6 +717,9 @@ if __name__ == "__main__":
         kwargs["n_requests"] = args.n
     if args.mode in ("directory", "stream"):
         kwargs["strict"] = False     # report failures after writing the json
+    if args.mode == "stream" and args.trace:
+        kwargs.update(trace=True, trace_out="TRACE_stream.json",
+                      metrics_out="METRICS_stream.prom")
     res = fn(**kwargs)
     if args.json:
         with open(args.json, "w") as f:

@@ -7,6 +7,11 @@ plus the cluster simulator and the real-engine orchestrator that host them.
 from repro.core.autoscaler import Autoscaler, HPAConfig  # noqa: F401
 from repro.core.cache_directory import ClusterCacheDirectory, DirectoryStats  # noqa: F401
 from repro.core.loadbalancer import LoadBalancer  # noqa: F401
+from repro.core.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                                MetricsRegistry, parse_exposition)
 from repro.core.migration import MigrationConfig, MigrationManager  # noqa: F401
 from repro.core.predictor import EWMA, HoltWinters, WindowedAR, make_predictor  # noqa: F401
 from repro.core.profiler import Profiler  # noqa: F401
+from repro.core.tracing import (Span, Tracer,  # noqa: F401
+                                attribute_slo_misses, format_attribution,
+                                trace_id_hex)

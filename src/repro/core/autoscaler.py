@@ -42,6 +42,15 @@ class Autoscaler:
         self._last_up = -1e30
         self._last_down = -1e30
         self.decisions: list[tuple[float, int, int, float]] = []  # (t, cur, new, metric)
+        self._m_events = None
+
+    def attach_metrics(self, registry) -> None:
+        """Bind autoscaler instruments onto a cluster metrics registry."""
+        self._m_events = registry.counter(
+            "autoscaler_scale_events_total", "Scale decisions, by direction",
+            ("direction",))
+        self._m_metric = registry.gauge(
+            "autoscaler_metric", "Last metric value the control law saw")
 
     def _raw_desired(self, current: int, metric: float) -> int:
         c = self.cfg
@@ -58,6 +67,8 @@ class Autoscaler:
         if c.proactive and self.predictor is not None:
             self.predictor.observe(t, metric)
             metric = self.predictor.forecast(c.horizon_s)
+        if self._m_events is not None:
+            self._m_metric.set(metric)
         desired = self._raw_desired(current, metric)
         desired = min(max(desired, c.min_replicas), c.max_replicas)
 
@@ -70,6 +81,8 @@ class Autoscaler:
                 return current
             self._last_up = t
             self.decisions.append((t, current, desired, metric))
+            if self._m_events is not None:
+                self._m_events.inc(direction="up")
             return desired
         if desired < current:
             # scale-down stabilization: act on the max desired in the window;
@@ -82,5 +95,7 @@ class Autoscaler:
                 return current
             self._last_down = t
             self.decisions.append((t, current, stab, metric))
+            if self._m_events is not None:
+                self._m_events.inc(direction="down")
             return stab
         return current

@@ -23,7 +23,9 @@ from typing import Callable
 
 from repro.core.cache_directory import ClusterCacheDirectory
 from repro.core.loadbalancer import LoadBalancer
+from repro.core.metrics import MetricsRegistry
 from repro.core.migration import MigrationConfig, MigrationManager
+from repro.core.tracing import Tracer
 from repro.serving.engine import InferenceEngine
 from repro.serving.request import Request, State
 
@@ -70,13 +72,23 @@ class DisaggregatedServer:
         # prefix caches: the decode-routing hook scores handoff targets by
         # cached overlap with the request's materialised sequence
         self.directory = ClusterCacheDirectory()
+        # one tracer/registry across both pools: the prefill->decode handoff
+        # is mid-request, so its spans must land in one trace
+        self.tracer = Tracer()
+        self.metrics = MetricsRegistry()
         for i, e in enumerate(self.prefill_pool + self.decode_pool):
             e.lb_id = i
+            e.set_tracer(self.tracer)
+            e.set_metrics(self.metrics)
         for e in self.decode_pool:
             e.attach_cache_directory(self.directory, e.lb_id)
         self.balancer = LoadBalancer(cfg.lb_policy, directory=self.directory,
                                      directory_load_weight=cfg.directory_load_weight)
-        self.migrations = MigrationManager(cfg.migration)
+        self.balancer.attach_metrics(self.metrics)
+        # the disaggregated transfer is its own span family: "handoff"
+        self.migrations = MigrationManager(cfg.migration,
+                                           transfer_span="handoff")
+        self.migrations.attach_metrics(self.metrics)
         self.finished: list[Request] = []
         self.history: list[DisaggStepStats] = []
         # pool-wide event stream: prefill-engine first tokens, handoff

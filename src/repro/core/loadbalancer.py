@@ -39,6 +39,13 @@ class LoadBalancer:
         # that keeps cache-chasing from piling requests on one replica
         self.directory = directory
         self.directory_load_weight = directory_load_weight
+        self._m_picks = None
+
+    def attach_metrics(self, registry) -> None:
+        """Bind routing instruments onto a cluster metrics registry."""
+        self._m_picks = registry.counter(
+            "lb_routing_decisions_total", "Routing decisions, by policy",
+            ("policy",))
 
     def pick(self, replicas: Sequence, load: Callable[[object], float],
              weight: Callable[[object], float] = lambda r: 1.0,
@@ -52,6 +59,8 @@ class LoadBalancer:
         the "directory" policy's cluster-radix overlap walk."""
         live = [r for r in replicas]
         assert live, "no replicas"
+        if self._m_picks is not None:
+            self._m_picks.inc(policy=self.policy)
         if len(live) == 1:
             return live[0]
         if self.policy == "rr":

@@ -52,11 +52,38 @@ class MigrationFailure:
 
 
 class MigrationManager:
-    def __init__(self, cfg: MigrationConfig = MigrationConfig()):
+    def __init__(self, cfg: MigrationConfig = MigrationConfig(),
+                 transfer_span: str = "migration_transfer"):
         self.cfg = cfg
+        # span name a successful handoff is annotated with on the request's
+        # trace: "migration_transfer" for rebalance/drain moves,
+        # "handoff" when the disaggregated server owns this manager
+        self.transfer_span = transfer_span
         self.events: list[MigrationEvent] = []
         self.failures: list[MigrationFailure] = []
         self.attempted = 0
+        self._m_attempts = self._m_success = self._m_failures = None
+        self._m_bytes = self._m_bytes_full = self._m_blocks_skipped = None
+
+    def attach_metrics(self, registry) -> None:
+        """Bind migration instruments onto a cluster metrics registry."""
+        self._m_attempts = registry.counter(
+            "migration_attempts_total", "Handoffs attempted")
+        self._m_success = registry.counter(
+            "migration_success_total", "Handoffs completed, by phase",
+            ("phase",))
+        self._m_failures = registry.counter(
+            "migration_failures_total", "Handoffs failed, by reason",
+            ("reason",))
+        self._m_bytes = registry.counter(
+            "migration_bytes_total",
+            "KV bytes actually transferred (dst-cached blocks skipped)")
+        self._m_bytes_full = registry.counter(
+            "migration_bytes_full_total",
+            "Full KV footprint of migrated requests")
+        self._m_blocks_skipped = registry.counter(
+            "migration_blocks_skipped_total",
+            "Blocks not shipped because the destination already cached them")
 
     @property
     def succeeded(self) -> int:
@@ -103,6 +130,8 @@ class MigrationManager:
     def _fail(self, now: float, rid: int, src_idx: int, dst_idx: int,
               reason: str) -> None:
         self.failures.append(MigrationFailure(now, rid, src_idx, dst_idx, reason))
+        if self._m_failures is not None:
+            self._m_failures.inc(reason=reason)
 
     def migrate(self, src: InferenceEngine, dst: InferenceEngine, rid: int,
                 now: float, src_idx: int = 0, dst_idx: int = 1) -> MigrationEvent | None:
@@ -123,6 +152,8 @@ class MigrationManager:
         extraction, so the re-prefill is mostly cache hits).  Every failure
         is recorded in :attr:`failures` with a reason."""
         self.attempted += 1
+        if self._m_attempts is not None:
+            self._m_attempts.inc()
         src_paged = getattr(src, "paged", False)
         if src_paged != getattr(dst, "paged", False):
             self._fail(now, rid, src_idx, dst_idx, "backend-mismatch")
@@ -159,6 +190,11 @@ class MigrationManager:
                 req.t_admit = None
                 req.preemptions += 1
                 src.scheduler.queue.append(req)
+                # the extract closed the phase span; the request is queued
+                # again, so its trace re-enters queue residency here
+                src.tracer.begin(rid, "queue_wait", now,
+                                 replica=getattr(src, "_rlabel", None),
+                                 requeued=True)
                 # stream consumers: earlier token indices will be re-emitted
                 # by whichever replica re-serves this request — the demux
                 # drops them, keeping downstream streams append-only
@@ -169,6 +205,24 @@ class MigrationManager:
                             self.transfer_time(nbytes), bytes_full=nbytes_full,
                             blocks_skipped=skipped, phase=payload["phase"])
         self.events.append(ev)
+        # the KV handoff on the request's trace: an instant span on the step
+        # clock carrying the modeled transfer cost as an attribute (the
+        # attribution report charges duration_s to the migration bucket)
+        dst.tracer.annotate(rid, self.transfer_span, now,
+                            replica=getattr(dst, "_rlabel", None),
+                            src=src_idx, dst=dst_idx, bytes=nbytes,
+                            bytes_full=nbytes_full, blocks_skipped=skipped,
+                            duration_s=ev.duration_s)
+        if src.tracer is not dst.tracer:
+            # replicas with independent tracers each keep their slice of the
+            # trace (same trace id, disjoint span ids); close the source's
+            # so no span is left open on a replica that no longer serves it
+            src.tracer.finish(rid, now, status="migrated-out")
+        if self._m_attempts is not None:
+            self._m_success.inc(phase=payload["phase"])
+            self._m_bytes.inc(nbytes)
+            self._m_bytes_full.inc(nbytes_full)
+            self._m_blocks_skipped.inc(skipped)
         return ev
 
     def pick_request(self, eng: InferenceEngine,

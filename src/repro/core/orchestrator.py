@@ -22,9 +22,11 @@ from typing import Callable
 from repro.core.autoscaler import Autoscaler, HPAConfig
 from repro.core.cache_directory import ClusterCacheDirectory
 from repro.core.loadbalancer import LoadBalancer
+from repro.core.metrics import MetricsRegistry
 from repro.core.migration import MigrationConfig, MigrationManager
 from repro.core.predictor import make_predictor
 from repro.core.profiler import Profiler
+from repro.core.tracing import Tracer
 from repro.serving.engine import InferenceEngine
 from repro.serving.request import Request
 
@@ -57,18 +59,36 @@ class Orchestrator:
         self.cfg = cfg
         self.make_engine = make_engine
         self._next_lb_id = 0
+        # cluster-wide observability: one Tracer + one MetricsRegistry that
+        # every replica is rebound onto at spawn, so a migrated request's
+        # spans land in one trace and the exposition covers the whole plane
+        self.tracer = Tracer()
+        self.metrics = MetricsRegistry()
+        self._g_replicas = self.metrics.gauge(
+            "cluster_replicas", "Live replica count")
+        self._g_dir_entries = self.metrics.gauge(
+            "directory_entries", "Cluster cache-directory entries")
+        self._g_dir_chains = self.metrics.gauge(
+            "directory_distinct_chains", "Distinct chains in the directory")
+        self._c_dir = self.metrics.counter(
+            "directory_events_total",
+            "Directory lifecycle events (inserts / evicts / reconciles / "
+            "repairs)", ("kind",))
         # cluster-level prefix-cache directory: every paged replica's index
         # deltas stream into it; the "directory" LB policy routes on it
         self.directory = ClusterCacheDirectory()
         self.engines: list[InferenceEngine] = [self._spawn()
                                                for _ in range(cfg.min_replicas)]
         self._cold: dict[int, int] = {}
-        self.profiler = Profiler()
+        self.profiler = Profiler(registry=self.metrics)
         self.autoscaler = Autoscaler(cfg.hpa, make_predictor(cfg.predictor))
+        self.autoscaler.attach_metrics(self.metrics)
         self.balancer = LoadBalancer(cfg.lb_policy, seed=cfg.lb_seed,
                                      directory=self.directory,
                                      directory_load_weight=cfg.directory_load_weight)
+        self.balancer.attach_metrics(self.metrics)
         self.migrations = MigrationManager(cfg.migration)
+        self.migrations.attach_metrics(self.metrics)
         self._steps = 0
         self._controls = 0
         self.scale_history: list[tuple[float, int]] = []
@@ -88,6 +108,8 @@ class Orchestrator:
         eng = self.make_engine()
         eng.lb_id = self._next_lb_id
         self._next_lb_id += 1
+        eng.set_tracer(self.tracer)
+        eng.set_metrics(self.metrics)
         eng.attach_cache_directory(self.directory, eng.lb_id)
         return eng
 
@@ -191,6 +213,15 @@ class Orchestrator:
         # (observe_tokens would turn it into a bogus tokens/s rate)
         self.profiler.observe_util("cluster/directory_entries", now,
                                    float(self.directory.total_entries))
+        # cluster + directory exposition (pegged: DirectoryStats keeps its
+        # own cumulative counts)
+        self._g_replicas.set(len(self.engines))
+        self._g_dir_entries.set(self.directory.total_entries)
+        self._g_dir_chains.set(self.directory.distinct_chains)
+        ds = self.directory.stats
+        for kind in ("inserts", "evicts", "reconciles", "stale_dropped",
+                     "missed_added", "lookups"):
+            self._c_dir.peg(getattr(ds, kind), kind=kind)
 
     def _drain(self, victim: int, keep: list[int], now: float) -> None:
         """Move every live request off a scale-down victim: decode rows and

@@ -59,9 +59,22 @@ class SeriesWindow:
     def sum(self, now: float | None = None) -> float:
         return sum(self.values(now))
 
+    def effective_span(self, now: float | None = None) -> float:
+        """Seconds the window actually covers: ``window_s`` once full, the
+        observed span before that — dividing by the full window while it is
+        still filling would bias every early rate low (an autoscaler seeing
+        half the true arrival rate right when it matters most)."""
+        if not self._q:
+            return self.window_s
+        t = self._q[-1].t if now is None else now
+        span = min(self.window_s, t - self._q[0].t)
+        # single sample / zero span: fall back to the full window rather
+        # than dividing by ~0 and reporting an absurd spike
+        return span if span > 0 else self.window_s
+
     def rate(self, now: float) -> float:
-        """Samples per second over the window."""
-        return self.count(now) / self.window_s
+        """Samples per second over the *covered* span (<= window_s)."""
+        return self.count(now) / self.effective_span(now)
 
     def skewness(self, now: float | None = None) -> float:
         """Right-skew indicator: (max - median) / (median - min) proxy, plus
@@ -77,10 +90,29 @@ class SeriesWindow:
 
 class Profiler:
     """Per-target metric store.  Targets are free-form strings
-    ('layer/27', 'stage/3/replica/0', 'engine/decode')."""
+    ('layer/27', 'stage/3/replica/0', 'engine/decode').
 
-    def __init__(self, window_s: float = 15.0):
+    With a :class:`~repro.core.metrics.MetricsRegistry` attached, the
+    profiler is a *consumer* of the metrics surface rather than a parallel
+    store: every ingest also lands in registry instruments labeled by
+    target (``profiler_latency_seconds`` / ``profiler_util`` /
+    ``profiler_tokens_total``), so the exposition carries everything the
+    control loop sees while the windows keep serving percentile queries."""
+
+    def __init__(self, window_s: float = 15.0, registry=None):
         self.window_s = window_s
+        self.registry = registry
+        self._m_latency = self._m_util = self._m_tokens = None
+        if registry is not None:
+            self._m_latency = registry.histogram(
+                "profiler_latency_seconds",
+                "Observed latency per profiler target", ("target",))
+            self._m_util = registry.gauge(
+                "profiler_util", "Last observed utilization per target",
+                ("target",))
+            self._m_tokens = registry.counter(
+                "profiler_tokens_total", "Tokens observed per target",
+                ("target",))
         self.latency: dict[str, SeriesWindow] = defaultdict(
             lambda: SeriesWindow(window_s))
         self.util: dict[str, SeriesWindow] = defaultdict(
@@ -95,14 +127,20 @@ class Profiler:
         self.latency[target].observe(t, seconds)
         self.alltime_max[target] = max(self.alltime_max[target], seconds)
         self.alltime_count[target] += 1
+        if self._m_latency is not None:
+            self._m_latency.observe(seconds, target=target)
 
     def observe_util(self, target: str, t: float, frac: float) -> None:
         self.util[target].observe(t, frac)
+        if self._m_util is not None:
+            self._m_util.set(frac, target=target)
 
     def observe_tokens(self, target: str, t: float, n: float) -> None:
         """Token-throughput counter (engine prefill/decode tokens per step;
         the autoscaler's 'work arriving' signal alongside queue depth)."""
         self.tokens[target].observe(t, float(n))
+        if self._m_tokens is not None:
+            self._m_tokens.inc(float(n), target=target)
 
     # ------------------------------------------------------------- queries
     def p(self, target: str, pct: float, now: float | None = None) -> float:
@@ -112,13 +150,18 @@ class Profiler:
         return self.util[target].mean(now)
 
     def token_rate(self, target: str, now: float | None = None) -> float:
-        """Tokens per second over the sliding window."""
+        """Tokens per second over the covered span of the sliding window
+        (the full ``window_s`` once it has filled)."""
         w = self.tokens[target]
-        return w.sum(now) / w.window_s
+        return w.sum(now) / w.effective_span(now)
 
     def bottlenecks(self, prefix: str = "", now: float | None = None,
                     metric: str = "max") -> list[tuple[str, float]]:
-        """Targets ranked by descending latency metric (paper Fig. 3)."""
+        """Targets ranked by descending latency metric (paper Fig. 3).
+        ``metric`` is one of "max" | "alltime_max" | "p99"."""
+        if metric not in ("max", "alltime_max", "p99"):
+            raise ValueError(f"unknown bottleneck metric {metric!r}: "
+                             "expected 'max', 'alltime_max' or 'p99'")
         rows = []
         for tgt, w in self.latency.items():
             if not tgt.startswith(prefix):

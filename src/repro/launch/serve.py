@@ -45,10 +45,9 @@ def _report(done, rejected, total, n_replicas, n_migrations) -> bool:
     return len(done) + len(rejected) == total
 
 
-def _serve_batch(args, cfg) -> int:
+def _serve_batch(args, cfg, orch) -> int:
     from repro.serving import Request, SamplingParams, State
 
-    orch = _build_orchestrator(args, cfg)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
@@ -66,12 +65,11 @@ def _serve_batch(args, cfg) -> int:
     return 0 if ok else 1
 
 
-def _serve_stream(args, cfg) -> int:
+def _serve_stream(args, cfg, orch) -> int:
     """Per-token streaming demo: interleaved SSE streams over the cluster
     front-end, printed as frames arrive."""
     from repro.serving import SSE_DONE, CompletionRequest, CompletionsAPI
 
-    orch = _build_orchestrator(args, cfg)
     api = CompletionsAPI(orch, model=args.arch)
     rng = np.random.default_rng(0)
     n = min(args.requests, 4)        # a readable number of live streams
@@ -111,6 +109,12 @@ def main(argv=None):
                          "per-token SSE frames")
     ap.add_argument("--dryrun", action="store_true",
                     help="lower+compile the production decode step and exit")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the request-lifecycle trace as Chrome/"
+                         "Perfetto trace-event JSON to this path")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a Prometheus text exposition of the cluster "
+                         "metrics registry to this path")
     ap.add_argument("--perf", nargs="*", default=[])
     args = ap.parse_args(argv)
 
@@ -122,9 +126,18 @@ def main(argv=None):
 
     from repro.configs import get_config
     cfg = get_config(args.arch + "-smoke")
-    if args.stream:
-        return _serve_stream(args, cfg)
-    return _serve_batch(args, cfg)
+    orch = _build_orchestrator(args, cfg)
+    rc = _serve_stream(args, cfg, orch) if args.stream \
+        else _serve_batch(args, cfg, orch)
+    if args.trace_out:
+        orch.tracer.write_chrome_trace(args.trace_out)
+        print(f"trace written to {args.trace_out} "
+              f"({sum(1 for _ in orch.tracer.traces())} traces)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(orch.metrics.render())
+        print(f"metrics exposition written to {args.metrics_out}")
+    return rc
 
 
 if __name__ == "__main__":

@@ -35,6 +35,14 @@ from repro.serving.events import (EngineEvent, FinishEvent, PreemptEvent,
                                   TokenEvent)
 from repro.serving.request import Request, SamplingParams, State
 
+
+def _trace_hex(rid: int) -> str:
+    """Trace id for a rid (function-level import: repro.core imports this
+    module, so a top-level import of repro.core.tracing would be circular).
+    Response/chunk ids embed it so callers can join API output to traces."""
+    from repro.core.tracing import trace_id_hex
+    return trace_id_hex(rid)
+
 # ------------------------------------------------------------------- DTOs
 
 
@@ -91,6 +99,7 @@ class CompletionResponse:
     x_ttft: float | None = None
     x_tpot: float | None = None
     x_migrations: int = 0
+    x_trace_id: str | None = None    # join key into --trace-out output
 
     def to_dict(self) -> dict[str, Any]:
         return dataclasses.asdict(self)
@@ -184,7 +193,7 @@ class CompletionsAPI:
     def _chunk(self, req: Request, t: float, tokens: list[int],
                finish: str | None) -> CompletionChunk:
         return CompletionChunk(
-            id=f"cmpl-{req.rid}", created=t, model=self.model,
+            id=f"cmpl-{_trace_hex(req.rid)}", created=t, model=self.model,
             choices=[{"index": 0, "tokens": tokens,
                       "finish_reason": finish}])
 
@@ -222,13 +231,14 @@ class CompletionsAPI:
                 "streamed tokens diverged from Request.output"
         created = time.time() if now is None else now
         return CompletionResponse(
-            id=f"cmpl-{req.rid}", created=created, model=self.model,
+            id=f"cmpl-{_trace_hex(req.rid)}", created=created, model=self.model,
             choices=[CompletionChoice(index=0, tokens=tokens,
                                       finish_reason=finish)],
             usage=CompletionUsage(prompt_tokens=len(creq.prompt),
                                   completion_tokens=len(tokens),
                                   total_tokens=len(creq.prompt) + len(tokens)),
-            x_ttft=req.ttft, x_tpot=req.tpot, x_migrations=req.migrations)
+            x_ttft=req.ttft, x_tpot=req.tpot, x_migrations=req.migrations,
+            x_trace_id=_trace_hex(req.rid))
 
     # ------------------------------------------------------- streaming path
     def stream(self, creq: CompletionRequest, now: float | None = None,

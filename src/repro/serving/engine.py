@@ -92,7 +92,7 @@ class InferenceEngine:
                  kv_backend: str = "dense",
                  block_size: int = 16, num_blocks: int | None = None,
                  enable_prefix_cache: bool = True,
-                 seed: int = 0):
+                 seed: int = 0, tracer=None, metrics=None):
         assert kv_backend in ("dense", "paged")
         self.cfg = cfg
         self.perf = perf
@@ -194,6 +194,20 @@ class InferenceEngine:
         self._pending_events: list[EngineEvent] = []
         self._risk_streak = 0       # consecutive SLO-guard-risky steps
         self.preemptions = 0        # rows displaced by the SLO guard (total)
+
+        # observability (core/tracing.py, core/metrics.py) — imported at
+        # runtime: core/__init__ imports serving.engine, so a module-level
+        # import here would be circular.  Standalone engines get their own
+        # tracer/registry; the orchestrator and the disaggregated server
+        # rebind every replica to shared ones via set_tracer/set_metrics.
+        from repro.core.metrics import MetricsRegistry
+        from repro.core.tracing import Tracer
+        self._rlabel = str(getattr(self, "lb_id", 0))
+        self.tracer = tracer if tracer is not None else Tracer()
+        self.metrics: Any = None
+        self._bind_instruments(metrics if metrics is not None
+                               else MetricsRegistry())
+        self.scheduler.on_reject = self._trace_reject
 
     # ------------------------------------------------------------- internals
     def _insert_rows_impl(self, pool_tree, new_tree, rows):
@@ -345,6 +359,7 @@ class InferenceEngine:
             # cache row (or cannot be chunked on this family) bounces here
             req.state = State.REJECTED
             self.rejected_long += 1
+            self._trace_reject(req, now, "prompt-too-long")
             return False
         if self.paged:
             total = min(len(req.prompt) + req.sampling.max_new_tokens,
@@ -353,8 +368,20 @@ class InferenceEngine:
                 # an under-provisioned block pool can never map this request
                 req.state = State.REJECTED
                 self.rejected_long += 1
+                self._trace_reject(req, now, "kv-unmappable")
                 return False
-        return self.scheduler.submit(req, now)
+        ok = self.scheduler.submit(req, now)
+        if ok:
+            self.tracer.start_trace(
+                req.rid, now, replica=self._rlabel,
+                prompt_tokens=len(req.prompt), slo_ttft=req.slo_ttft,
+                slo_tpot=req.slo_tpot)
+            # idempotent re-open: a drain/rollback resubmit of a live
+            # request already has its queue_wait span running
+            if self.tracer.open_span(req.rid, "queue_wait") is None:
+                self.tracer.begin(req.rid, "queue_wait", now,
+                                  replica=self._rlabel)
+        return ok
 
     def pending(self) -> int:
         return self.scheduler.depth() + self.pool.used
@@ -407,6 +434,10 @@ class InferenceEngine:
             row = self.pool.allocate(req.rid)
             assert row is not None
             req.row, req.state, req.t_admit = row, State.PREFILL, now
+            self._trace_admit(req, now, kind=f"bucket{bucket}", row=row)
+            self.tracer.annotate(req.rid, "prefill_chunk[0]", now,
+                                 replica=self._rlabel,
+                                 tokens=len(req.prompt), pos0=0)
             rows[i] = row
             toks[i, : len(req.prompt)] = req.prompt
             true[i] = len(req.prompt)
@@ -450,6 +481,7 @@ class InferenceEngine:
             new_tokens[row, 0] = t
             self._set_row_sampling(row, req)
             self.row_req[row] = req
+            self._trace_first_token(req, now)
             self._emit_first_token(req, t, now)
             self._maybe_finish_first(row, req, now)
         self.tokens = jnp.asarray(new_tokens)
@@ -459,6 +491,7 @@ class InferenceEngine:
         row = self.pool.allocate(req.rid)
         assert row is not None
         req.row, req.state, req.t_admit = row, State.PREFILL, now
+        self._trace_admit(req, now, kind="chunked", row=row)
         self._prefilling[row] = req
         self._consumed[row] = 0
         self._fresh.add(row)
@@ -499,6 +532,7 @@ class InferenceEngine:
         row = self.pool.allocate(req.rid)
         assert row is not None
         req.row, req.state, req.t_admit = row, State.PREFILL, now
+        self._trace_admit(req, now, kind="paged", row=row, cached=n_hit)
         req.prefix_hit_tokens = n_hit
         self._row_blocks[row] = list(blocks)
         self.block_tables[row, :] = -1
@@ -523,6 +557,9 @@ class InferenceEngine:
         for row, n in rows_n.items():
             req = self._prefilling[row]
             c0 = self._consumed[row]
+            k = self.tracer.count(req.rid, "prefill_chunk")
+            self.tracer.annotate(req.rid, f"prefill_chunk[{k}]", now,
+                                 replica=self._rlabel, tokens=n, pos0=c0)
             toks[row, :n] = req.prompt[c0:c0 + n]
             pos0[row] = c0
             nval[row] = n
@@ -568,6 +605,7 @@ class InferenceEngine:
             self.pos[row] = len(req.prompt)
             new_tokens[row, 0] = t
             self.row_req[row] = req
+            self._trace_first_token(req, now)
             self._emit_first_token(req, t, now)
             self._maybe_finish_first(row, req, now)
         self.tokens = jnp.asarray(new_tokens)
@@ -594,6 +632,8 @@ class InferenceEngine:
             self._release_row(row, req, insert=True)
         self.pool.free(row)
         self.finished.append(req)
+        self.tracer.end(req.rid, "decode", now, tokens=len(req.output))
+        self.tracer.finish(req.rid, now)
         self.emit_event(FinishEvent(t=now, rid=req.rid,
                                     reason=req.finish_reason,
                                     n_tokens=len(req.output)))
@@ -604,6 +644,12 @@ class InferenceEngine:
         ``StepStats.events``).  Public so the migration layer can record
         handoff/rollback transitions against the engine they happened on."""
         self._pending_events.append(ev)
+        # central count: every preempt/finish flows through here, including
+        # the ones the migration layer emits between steps
+        if isinstance(ev, PreemptEvent):
+            self._c_preempts.inc(replica=self._rlabel, reason=ev.reason)
+        elif isinstance(ev, FinishEvent):
+            self._c_finished.inc(replica=self._rlabel, reason=ev.reason)
 
     def drain_events(self) -> list[EngineEvent]:
         """Return and clear the pending event stream.  ``step()`` drains
@@ -615,6 +661,123 @@ class InferenceEngine:
     def _emit_first_token(self, req: Request, token: int, now: float) -> None:
         self.emit_event(FirstTokenEvent(t=now, rid=req.rid, token=token,
                                         index=0))
+
+    # ------------------------------------------------------- observability
+    def set_tracer(self, tracer) -> None:
+        """Rebind to a shared (cluster-wide) tracer; also refreshes the
+        replica label, which the control plane sets via ``lb_id``."""
+        self.tracer = tracer
+        self._rlabel = str(getattr(self, "lb_id", 0))
+
+    def set_metrics(self, registry) -> None:
+        """Rebind every instrument onto a shared (cluster-wide) registry."""
+        self._bind_instruments(registry)
+
+    def _bind_instruments(self, registry) -> None:
+        self.metrics = registry
+        self._rlabel = str(getattr(self, "lb_id", 0))
+        self._c_prefill_tok = registry.counter(
+            "engine_prefill_tokens_total",
+            "Prompt tokens prefilled (true) / compute launched (padded)",
+            ("replica", "kind"))
+        self._c_decode_tok = registry.counter(
+            "engine_decode_tokens_total", "Decode tokens emitted", ("replica",))
+        self._c_admissions = registry.counter(
+            "engine_admissions_total", "Requests admitted onto a row",
+            ("replica",))
+        self._c_finished = registry.counter(
+            "engine_requests_finished_total", "Requests retired, by reason",
+            ("replica", "reason"))
+        self._c_preempts = registry.counter(
+            "engine_preemptions_total",
+            "Rows displaced pre-finish, by reason (slo-decode-pressure / "
+            "migrate / requeued)", ("replica", "reason"))
+        self._c_rejections = registry.counter(
+            "serving_rejections_total",
+            "Requests rejected, by reason (queue-full / timeout / "
+            "prompt-too-long / kv-unmappable)", ("replica", "reason"))
+        self._g_occupancy = registry.gauge(
+            "engine_batch_occupancy", "Rows occupied / capacity", ("replica",))
+        self._g_queue = registry.gauge(
+            "engine_queue_depth", "Scheduler queue depth", ("replica",))
+        self._g_kv_util = registry.gauge(
+            "engine_kv_util", "KV memory utilization fraction", ("replica",))
+        self._g_kv_frag = registry.gauge(
+            "engine_kv_frag", "Wasted tail-of-block KV slots fraction",
+            ("replica",))
+        self._h_step = registry.histogram(
+            "engine_step_seconds", "Wall seconds per step phase",
+            ("replica", "phase"))
+        if self.paged:
+            self._c_prefix = registry.counter(
+                "prefix_cache_tokens_total",
+                "Prefix-cache token outcomes (hit / miss)",
+                ("replica", "kind"))
+            self._c_prefix_ev = registry.counter(
+                "prefix_cache_events_total",
+                "Prefix-cache block events (evictions / cow_copies / "
+                "inserted_blocks)", ("replica", "kind"))
+            self._g_blocks = registry.gauge(
+                "prefix_cache_blocks", "KV blocks by state (used / cached)",
+                ("replica", "kind"))
+
+    def _observe_step(self, st: StepStats) -> None:
+        """Mirror one StepStats into the registry (never affects serving)."""
+        rl = self._rlabel
+        if st.prefill_tokens:
+            self._c_prefill_tok.inc(st.prefill_tokens_true, replica=rl,
+                                    kind="true")
+            self._c_prefill_tok.inc(st.prefill_tokens_padded, replica=rl,
+                                    kind="padded")
+            self._h_step.observe(st.prefill_s, replica=rl, phase="prefill")
+        if st.tokens_out:
+            self._c_decode_tok.inc(st.tokens_out, replica=rl)
+            self._h_step.observe(st.decode_s, replica=rl, phase="decode")
+        if st.n_prefill:
+            self._c_admissions.inc(st.n_prefill, replica=rl)
+        self._g_occupancy.set(st.occupancy / max(self.capacity, 1), replica=rl)
+        self._g_queue.set(st.queue_depth, replica=rl)
+        self._g_kv_util.set(st.kv_util, replica=rl)
+        self._g_kv_frag.set(st.kv_frag, replica=rl)
+        if self.paged:
+            # peg, not inc: the prefix cache keeps its own cumulative
+            # counters, and a re-bound registry must not double count
+            self._c_prefix.peg(self.prefix.hit_tokens, replica=rl, kind="hit")
+            self._c_prefix.peg(self.prefix.miss_tokens, replica=rl,
+                               kind="miss")
+            self._c_prefix_ev.peg(self.prefix.evictions, replica=rl,
+                                  kind="evictions")
+            self._c_prefix_ev.peg(self.prefix.cow_copies, replica=rl,
+                                  kind="cow_copies")
+            self._c_prefix_ev.peg(self.prefix.inserted_blocks, replica=rl,
+                                  kind="inserted_blocks")
+            self._g_blocks.set(st.kv_blocks_used, replica=rl, kind="used")
+            self._g_blocks.set(st.kv_blocks_cached, replica=rl, kind="cached")
+
+    def _trace_reject(self, req: Request, now: float, reason: str) -> None:
+        """Rejection: a complete (instant) trace plus the rejection counter.
+        Doubles as the scheduler's ``on_reject`` hook, so queue-full and
+        admission-timeout rejections close their queue_wait span instead of
+        orphaning it."""
+        self._c_rejections.inc(replica=self._rlabel, reason=reason)
+        self.tracer.start_trace(req.rid, now, replica=self._rlabel,
+                                prompt_tokens=len(req.prompt))
+        self.tracer.finish(req.rid, now, status=f"rejected:{reason}")
+
+    def _trace_admit(self, req: Request, now: float, *, kind: str, row: int,
+                     cached: int = 0) -> None:
+        """Queue residency ends, prefill phase opens."""
+        tr, rid, rl = self.tracer, req.rid, self._rlabel
+        tr.end(rid, "queue_wait", now)
+        tr.annotate(rid, "admission", now, replica=rl, row=row, kind=kind,
+                    cached_prefix_tokens=cached)
+        tr.begin(rid, "prefill", now, replica=rl,
+                 prompt_tokens=len(req.prompt), cached_prefix_tokens=cached)
+
+    def _trace_first_token(self, req: Request, now: float) -> None:
+        """Prefill phase closes at the first token; decode phase opens."""
+        self.tracer.end(req.rid, "prefill", now)
+        self.tracer.begin(req.rid, "decode", now, replica=self._rlabel)
 
     # --------------------------------------------------------- SLO preempt
     def _preempt_freshest_prefill(self, now: float) -> bool:
@@ -639,6 +802,11 @@ class InferenceEngine:
         req.preemptions += 1
         self.preemptions += 1
         self.scheduler.queue.appendleft(req)
+        self.tracer.end(req.rid, "prefill", now, status="preempted")
+        self.tracer.annotate(req.rid, "slo_guard_preempt", now,
+                             replica=self._rlabel)
+        self.tracer.begin(req.rid, "queue_wait", now, replica=self._rlabel,
+                          requeued=True)
         self.emit_event(PreemptEvent(t=now, rid=req.rid,
                                      reason="slo-decode-pressure"))
         return True
@@ -802,6 +970,7 @@ class InferenceEngine:
             st.kv_frag = 0.0 if alloc == 0 else 1.0 - live_tok / alloc
         else:
             st.kv_util = self.pool.utilization()
+        self._observe_step(st)
         self.history.append(st)
         return st
 
@@ -934,9 +1103,13 @@ class InferenceEngine:
         req.row = None
         req.migrations += 1
         self.pool.free(row)
-        self.emit_event(PreemptEvent(
-            t=time.perf_counter() if now is None else now,
-            rid=rid, reason="migrate"))
+        now = time.perf_counter() if now is None else now
+        # close this replica's slice of the phase span and ship the span
+        # context with the KV: the destination continues the same trace
+        self.tracer.end(rid, "decode" if phase == "decode" else "prefill",
+                        now, status="migrate-out")
+        payload["trace"] = self.tracer.export_context(rid)
+        self.emit_event(PreemptEvent(t=now, rid=rid, reason="migrate"))
         return req, payload
 
     def _adopt_paged(self, req: Request, payload: dict, row: int) -> bool:
@@ -1001,15 +1174,22 @@ class InferenceEngine:
         self.pos[row] = payload["pos"]
         self._set_row_sampling(row, req)
         req.row = row
+        # continue the request's trace here: same trace id, span ids offset
+        # past the source's (no-op import when the cluster shares a tracer)
+        self.tracer.import_context(payload.get("trace"))
         if payload["phase"] == "decode":
             self.tokens = self.tokens.at[row, 0].set(payload["last_token"])
             self.row_req[row] = req
             req.state = State.DECODE
+            self.tracer.begin(req.rid, "decode", now, replica=self._rlabel,
+                              migrated_in=True, resume_pos=payload["pos"])
         else:
             # mid-prefill handoff: resume the chunk pipeline at the boundary
             self._prefilling[row] = req
             self._consumed[row] = payload["pos"]
             req.state = State.PREFILL
+            self.tracer.begin(req.rid, "prefill", now, replica=self._rlabel,
+                              migrated_in=True, resume_pos=payload["pos"])
         return True
 
     # ------------------------------------------------- cluster cache directory

@@ -67,11 +67,21 @@ class Scheduler:
         self.cfg = cfg
         self.queue: deque[Request] = deque()
         self.rejected = 0
+        # observability hook: called as on_reject(req, now, reason) for
+        # every rejection this scheduler decides ("queue-full" at submit,
+        # "timeout" at admission) — the engine binds it so rejected
+        # requests' traces close instead of orphaning their queue_wait span
+        self.on_reject: Callable[[Request, float, str], None] | None = None
+
+    def _reject(self, req: Request, now: float, reason: str) -> None:
+        req.state = State.REJECTED
+        self.rejected += 1
+        if self.on_reject is not None:
+            self.on_reject(req, now, reason)
 
     def submit(self, req: Request, now: float) -> bool:
         if len(self.queue) >= self.cfg.max_queue:
-            req.state = State.REJECTED
-            self.rejected += 1
+            self._reject(req, now, "queue-full")
             return False
         # ``is None`` — an explicit arrival == 0.0 is a legitimate event-clock
         # time (simulations start at t=0) and must not be overwritten.
@@ -108,8 +118,7 @@ class Scheduler:
             kept = deque()
             for r in self.queue:
                 if now - r.arrival > self.cfg.admission_timeout:
-                    r.state = State.REJECTED
-                    self.rejected += 1
+                    self._reject(r, now, "timeout")
                 else:
                     kept.append(r)
             self.queue = kept

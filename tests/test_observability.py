@@ -1,0 +1,457 @@
+"""Observability: the labeled metrics registry (render -> parse round-trip),
+request-lifecycle tracing (every span closed, phase spans tile the lifetime,
+one contiguous trace across a live migration), the SLO-miss attribution
+decomposition, and the profiler-window fixes that ride along."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.metrics import MetricsRegistry, parse_exposition
+from repro.core.profiler import Profiler, SeriesWindow
+from repro.core.tracing import (PHASES, Tracer, attribute_slo_misses,
+                                format_attribution, trace_id_hex)
+from repro.serving import InferenceEngine, Request, SamplingParams
+
+ARCH = "qwen2-0.5b-smoke"
+
+
+def _mk(backend="dense", **kw):
+    cfg = get_config(ARCH)
+    kw.setdefault("capacity", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("buckets", (8, 16))
+    kw.setdefault("seed", 0)
+    if backend == "paged":
+        kw.setdefault("block_size", 8)
+    return cfg, InferenceEngine(cfg, kv_backend=backend, **kw)
+
+
+def _drain(engines, t=0.0, max_steps=300):
+    """Step engines on the logical clock until drained; returns final t."""
+    engines = engines if isinstance(engines, (list, tuple)) else [engines]
+    for _ in range(max_steps):
+        if not any(e.pending() for e in engines):
+            break
+        for e in engines:
+            e.step(now=t)
+        t += 1.0
+    assert not any(e.pending() for e in engines), "engines never drained"
+    return t
+
+
+# --------------------------------------------------------------- metrics
+def test_registry_render_parse_round_trip():
+    reg = MetricsRegistry()
+    c = reg.counter("requests_total", "Requests served", ("replica", "kind"))
+    c.inc(replica="0", kind="ok")
+    c.inc(2.5, replica="0", kind="err")
+    g = reg.gauge("queue_depth", "Queue depth")
+    g.set(7)
+    h = reg.histogram("step_seconds", "Step latency", ("phase",),
+                      buckets=(0.1, 1.0))
+    h.observe(0.05, phase="decode")
+    h.observe(0.5, phase="decode")
+    h.observe(5.0, phase="decode")
+    text = reg.render()
+    exp = parse_exposition(text)
+    assert exp.value("requests_total", replica="0", kind="ok") == 1.0
+    assert exp.value("requests_total", replica="0", kind="err") == 2.5
+    assert exp.value("queue_depth") == 7.0
+    assert exp.types["step_seconds"] == "histogram"
+    assert exp.value("step_seconds_count", phase="decode") == 3.0
+    assert exp.value("step_seconds_bucket", le="0.1", phase="decode") == 1.0
+    assert exp.value("step_seconds_bucket", le="1", phase="decode") == 2.0
+    assert exp.value("step_seconds_bucket", le="+Inf", phase="decode") == 3.0
+    # rendering is deterministic (sorted) -> a second render is identical
+    assert reg.render() == text
+
+
+def test_exposition_label_escaping_round_trips():
+    reg = MetricsRegistry()
+    c = reg.counter("odd_total", "Odd label values", ("path",))
+    nasty = 'v"q\\nl\nz'
+    c.inc(path=nasty)
+    exp = parse_exposition(reg.render())
+    assert exp.value("odd_total", path=nasty) == 1.0
+
+
+def test_registry_rejects_type_and_label_mismatch():
+    reg = MetricsRegistry()
+    c = reg.counter("x_total", "c", ("a",))
+    with pytest.raises(ValueError):
+        reg.gauge("x_total", "now a gauge")          # type clash
+    with pytest.raises(ValueError):
+        reg.counter("x_total", "c", ("a", "b"))      # labelnames clash
+    with pytest.raises(ValueError):
+        c.inc(b="z")                                 # unknown label
+    with pytest.raises(ValueError):
+        c.inc(-1.0, a="v")                           # counters are monotonic
+    # idempotent re-registration hands back the same instrument
+    assert reg.counter("x_total", "c", ("a",)) is c
+
+
+def test_counter_peg_is_monotonic():
+    reg = MetricsRegistry()
+    c = reg.counter("mirror_total", "pegged from a cumulative source")
+    c.peg(5.0)
+    c.peg(3.0)          # source re-read lower (e.g. registry rebind): keep max
+    assert c.value() == 5.0
+    c.peg(9.0)
+    assert c.value() == 9.0
+
+
+def test_parse_exposition_rejects_malformed():
+    for bad in (
+        "nope{unclosed 1\n",
+        "# TYPE h histogram\nh_bucket{le=\"1.0\"} 3\nh_bucket{le=\"+Inf\"} 2\n"
+        "h_sum 1\nh_count 2\n",                      # non-cumulative buckets
+        "dup 1\ndup 2\n",                            # duplicate series
+    ):
+        with pytest.raises(ValueError):
+            parse_exposition(bad)
+
+
+# -------------------------------------------------------------- profiler
+def test_series_window_rate_uses_observed_span():
+    """Satellite fix: 3 events in the first 2s of a 15s window is 1.5/s,
+    not 3/15 — the early-window rate must divide by the observed span."""
+    w = SeriesWindow(window_s=15.0)
+    for t in (0.0, 1.0, 2.0):
+        w.observe(t, 1.0)
+    assert w.rate(2.0) == pytest.approx(3.0 / 2.0)
+    # single sample / zero span: fall back to the full window, not div-by-0
+    w2 = SeriesWindow(window_s=15.0)
+    w2.observe(0.0, 1.0)
+    assert w2.rate(0.0) == pytest.approx(1.0 / 15.0)
+    # steady state unchanged: a full window divides by window_s
+    w3 = SeriesWindow(window_s=2.0)
+    for t in np.arange(0.0, 6.0, 0.5):
+        w3.observe(float(t), 1.0)
+    assert w3.rate(5.5) == pytest.approx(w3.count(5.5) / 2.0)
+
+
+def test_profiler_token_rate_early_window():
+    p = Profiler(window_s=15.0)
+    p.observe_tokens("decode", 0.0, 10)
+    p.observe_tokens("decode", 2.0, 10)
+    assert p.token_rate("decode", now=2.0) == pytest.approx(10.0)
+
+
+def test_profiler_bottlenecks_rejects_unknown_metric():
+    p = Profiler()
+    p.observe_latency("prefill", 0.0, 0.1)
+    with pytest.raises(ValueError, match="unknown bottleneck metric"):
+        p.bottlenecks(metric="p50")
+    assert p.bottlenecks(metric="p99")      # valid metrics still work
+
+
+def test_profiler_mirrors_into_registry():
+    reg = MetricsRegistry()
+    p = Profiler(registry=reg)
+    p.observe_latency("decode", 0.0, 0.2)
+    p.observe_tokens("decode", 0.0, 32)
+    exp = parse_exposition(reg.render())
+    assert exp.value("profiler_latency_seconds_count", target="decode") == 1.0
+    assert exp.value("profiler_tokens_total", target="decode") == 32.0
+
+
+# ---------------------------------------------------------------- tracer
+def test_tracer_verify_catches_open_and_overlap():
+    tr = Tracer()
+    tr.start_trace(1, 0.0)
+    tr.begin(1, "queue_wait", 0.0)
+    assert any("never closed" in p for p in tr.verify())
+    tr.end(1, "queue_wait", 2.0)
+    tr.begin(1, "prefill", 1.0)             # overlaps queue_wait
+    tr.finish(1, 3.0)
+    assert any("overlap" in p for p in tr.verify(1))
+
+    ok = Tracer()
+    ok.start_trace(2, 0.0)
+    ok.begin(2, "queue_wait", 0.0)
+    ok.end(2, "queue_wait", 1.0)
+    ok.begin(2, "prefill", 1.0)             # shared endpoint = clean tiling
+    ok.end(2, "prefill", 2.0)
+    ok.begin(2, "decode", 2.5)              # 0.5 hole
+    ok.finish(2, 3.0)
+    assert ok.verify() == []
+    assert ok.gaps(2) == [(2.0, 2.5)]
+
+
+def test_tracer_rid_reuse_archives_incarnations():
+    tr = Tracer()
+    tr.start_trace(5, 0.0)
+    root = tr.start_trace(5, 1.0)           # root still open: same trace
+    assert root.t0 == 0.0
+    tr.finish(5, 2.0)
+    tr.start_trace(5, 10.0)                 # rid recycled: new incarnation
+    tr.finish(5, 11.0)
+    assert sum(1 for _ in tr.traces()) == 2
+    assert tr.verify() == []
+
+
+def test_chrome_trace_is_json_and_has_metadata():
+    tr = Tracer()
+    tr.start_trace(3, 0.0, replica="0")
+    tr.begin(3, "decode", 0.0, replica="0")
+    tr.finish(3, 1.0)
+    doc = json.loads(json.dumps(tr.chrome_trace()))
+    evs = doc["traceEvents"]
+    assert any(e["ph"] == "M" and e["name"] == "process_name" for e in evs)
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert {e["name"] for e in spans} == {"request", "decode"}
+    assert all(e["tid"] == 3 for e in spans)
+    assert spans[0]["args"]["trace_id"] == trace_id_hex(3)
+
+
+# ------------------------------------------------------ engine integration
+def test_engine_traces_close_tile_and_follow_taxonomy(rng):
+    """A mixed bucketed/chunked dense serve: every trace closes, phase spans
+    tile each lifetime gaplessly, and span names follow the taxonomy."""
+    cfg, eng = _mk()
+    lens = (5, 11, 40, 7, 23, 6)             # 40 -> chunked prefill
+    for i, n in enumerate(lens):
+        eng.submit(Request(rid=i,
+                           prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, n)],
+                           sampling=SamplingParams(max_new_tokens=4)),
+                   now=0.0)
+    _drain(eng)
+    assert len(eng.finished) == len(lens)
+    assert eng.tracer.verify() == []
+    for i, n in enumerate(lens):
+        assert eng.tracer.gaps(i) == []
+        names = [s.name for s in eng.tracer.spans(i)]
+        assert names[0] == "request"
+        for ph in PHASES:
+            assert ph in names
+        assert "admission" in names
+        chunks = [s for s in names if s.startswith("prefill_chunk")]
+        assert chunks == [f"prefill_chunk[{k}]" for k in range(len(chunks))]
+        if n > 32:
+            assert len(chunks) > 1, "long prompt should prefill in chunks"
+    exp = parse_exposition(eng.metrics.render())
+    assert exp.value("engine_requests_finished_total",
+                     replica="0", reason="length") == float(len(lens))
+
+
+@pytest.mark.parametrize("shared_tracer", [True, False])
+def test_mid_decode_migration_yields_one_contiguous_trace(rng, shared_tracer):
+    """The acceptance property: a paged request migrated mid-decode produces
+    ONE contiguous trace spanning both replicas — decode closes on the
+    source exactly where it reopens on the destination, the transfer is
+    annotated, and nothing is orphaned.  With independent tracers the
+    destination continues the span context from the migration payload and
+    the source's incarnation is finished as migrated-out."""
+    from repro.core.migration import MigrationManager
+    cfg, a = _mk("paged")
+    _, b = _mk("paged")
+    b.params = a.params
+    a.lb_id, b.lb_id = 0, 1
+    tracer = Tracer()
+    reg = MetricsRegistry()
+    if shared_tracer:
+        a.set_tracer(tracer)
+        b.set_tracer(tracer)
+    a.set_metrics(reg)
+    b.set_metrics(reg)
+
+    req = Request(rid=0,
+                  prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, 20)],
+                  sampling=SamplingParams(max_new_tokens=8))
+    a.submit(req, now=0.0)
+    t = 0.0
+    while len(req.output) < 2:               # chunked prefill + some decode
+        a.step(now=t)
+        t += 1.0
+    assert req.state.name == "DECODE"
+    mgr = MigrationManager()
+    mgr.attach_metrics(reg)
+    ev = mgr.migrate(a, b, rid=0, now=t, src_idx=0, dst_idx=1)
+    assert ev is not None and ev.phase == "decode"
+    _drain(b, t=t + 1.0)
+    assert len(b.finished) == 1
+
+    dst_tracer = tracer if shared_tracer else b.tracer
+    assert dst_tracer.verify() == []
+    assert dst_tracer.gaps(0) == []
+    spans = dst_tracer.spans(0)
+    if shared_tracer:
+        # both replicas' spans in one trace, decode handed off edge-to-edge
+        assert {s.replica for s in spans if s.replica is not None} == {"0", "1"}
+        decode = [s for s in spans if s.name == "decode"]
+        assert len(decode) == 2
+        assert decode[0].status == "migrate-out"
+        assert decode[0].t1 == decode[1].t0 == t
+        assert decode[1].attrs.get("migrated_in") is True
+    else:
+        # span ids continue from the exported context: no id collisions,
+        # and the source's trace is closed out rather than orphaned
+        src_ids = {s.span_id for s in a.tracer.spans(0)}
+        assert src_ids.isdisjoint({s.span_id for s in spans})
+        assert a.tracer.verify() == []
+        root = a.tracer.spans(0)[0]
+        assert root.status == "migrated-out"
+    transfer = [s for s in spans if s.name == "migration_transfer"]
+    assert len(transfer) == 1 and transfer[0].attrs["bytes"] == ev.bytes
+    exp = parse_exposition(reg.render())
+    assert exp.value("migration_success_total", phase="decode") == 1.0
+    a.prefix.check_invariants()
+    b.prefix.check_invariants()
+
+
+def test_migration_rollback_and_requeue_keep_trace_clean(rng, monkeypatch):
+    """Failure paths must not orphan spans: a dst-full rollback re-opens
+    decode on the source, and a both-sides-refuse requeue re-opens
+    queue_wait — the request still finishes with a closed, gapless trace."""
+    from repro.core.migration import MigrationManager
+    cfg, a = _mk("paged", capacity=1)
+    _, b = _mk("paged", capacity=1)
+    b.params = a.params
+    a.lb_id, b.lb_id = 0, 1
+    tracer = Tracer()
+    a.set_tracer(tracer)
+    b.set_tracer(tracer)
+    a.submit(Request(rid=0,
+                     prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, 10)],
+                     sampling=SamplingParams(max_new_tokens=8)), now=0.0)
+    b.submit(Request(rid=1,
+                     prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, 10)],
+                     sampling=SamplingParams(max_new_tokens=8)), now=0.0)
+    t = 1.0
+    for _ in range(3):
+        a.step(now=t)
+        b.step(now=t)
+        t += 1.0
+
+    mgr = MigrationManager()
+    # destination full -> rollback adopts back into the source
+    assert mgr.migrate(a, b, rid=0, now=t) is None
+    assert mgr.failures[-1].reason == "dst-full"
+    assert tracer.gaps(0) == []
+    # drain b, then force both engines to refuse -> explicit requeue
+    t = _drain(b, t=t + 1.0)
+    real_adopt = a.adopt
+    monkeypatch.setattr(a, "adopt", lambda req, payload, now=None: False)
+    monkeypatch.setattr(b, "adopt", lambda req, payload, now=None: False)
+    assert mgr.migrate(a, b, rid=0, now=t) is None
+    assert mgr.failures[-1].reason == "requeued"
+    qw = tracer.open_span(0, "queue_wait")
+    assert qw is not None and qw.attrs.get("requeued") is True
+    monkeypatch.setattr(a, "adopt", real_adopt)
+    _drain(a, t=t + 1.0)
+    assert len(a.finished) == 1
+    assert tracer.verify() == []
+    assert tracer.gaps(0) == []
+
+
+def test_rejections_close_traces():
+    cfg, eng = _mk()
+    too_long = list(range(eng.max_len + 8))
+    eng.submit(Request(rid=0, prompt=too_long,
+                       sampling=SamplingParams(max_new_tokens=2)), now=0.0)
+    spans = eng.tracer.spans(0)
+    assert spans and spans[0].status == "rejected:prompt-too-long"
+    assert eng.tracer.verify() == []
+    exp = parse_exposition(eng.metrics.render())
+    assert exp.value("serving_rejections_total",
+                     replica="0", reason="prompt-too-long") == 1.0
+
+
+def test_traces_stay_closed_under_random_traffic(rng):
+    """Property-style sweep: random prompt mixes (bucketed/chunked) across
+    recycled rids always drain to a tracer with zero integrity violations —
+    every span closed, no phase overlap, no coverage gaps."""
+    cfg, eng = _mk()
+    for round_ in range(3):
+        n = int(rng.integers(3, 7))
+        for i in range(n):
+            ln = int(rng.integers(3, 48))
+            eng.submit(Request(rid=i,
+                               prompt=[int(x) for x in rng.integers(0, cfg.vocab_size, ln)],
+                               sampling=SamplingParams(
+                                   max_new_tokens=int(rng.integers(1, 6)))),
+                       now=float(round_ * 1000))
+        _drain(eng, t=float(round_ * 1000))
+        for i in range(n):
+            assert eng.tracer.gaps(i) == []
+        eng.finished.clear()
+    assert eng.tracer.verify() == []
+
+
+# ------------------------------------------------------------- front-end
+def test_completions_api_ids_derive_from_trace_id(rng):
+    from repro.serving import CompletionRequest, CompletionsAPI
+    cfg, eng = _mk()
+    api = CompletionsAPI(eng, model=ARCH)
+    prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 9)]
+    resp = api.create(CompletionRequest(prompt=list(prompt), max_tokens=4),
+                      now=0.0)
+    assert resp.x_trace_id is not None
+    assert len(resp.x_trace_id) == 16
+    assert int(resp.x_trace_id, 16) >= 0
+    assert resp.id == f"cmpl-{resp.x_trace_id}"
+    # the id joins into the tracer: that trace exists and is closed
+    rid = int(resp.x_trace_id, 16)
+    assert eng.tracer.spans(rid) and eng.tracer.verify(rid) == []
+
+    chunks = list(api.stream(CompletionRequest(prompt=list(prompt),
+                                               max_tokens=4, stream=True),
+                             now=100.0))
+    cid = chunks[0].id
+    assert cid.startswith("cmpl-") and len(cid) == len("cmpl-") + 16
+    assert all(c.id == cid for c in chunks), "stream id must be stable"
+    assert cid != resp.id, "distinct requests get distinct trace ids"
+
+
+# ------------------------------------------------------------ attribution
+def test_slo_attribution_names_dominant_phase():
+    tr = Tracer()
+    tr.start_trace(7, 0.0)
+    tr.begin(7, "queue_wait", 0.0)
+    tr.end(7, "queue_wait", 8.0)
+    tr.begin(7, "prefill", 8.0)
+    tr.end(7, "prefill", 9.0)
+    tr.begin(7, "decode", 9.0)
+    tr.finish(7, 12.0)
+    r = Request(rid=7, prompt=[1, 2, 3], sampling=SamplingParams(),
+                slo_ttft=2.0, slo_tpot=0.5)
+    r.arrival = 0.0
+    r.t_first_token = 9.0
+    r.token_times = [9.0, 10.5, 12.0]
+    rows = attribute_slo_misses(tr, [r])
+    assert [row["slo"] for row in rows] == ["ttft", "tpot"]
+    ttft, tpot = rows
+    assert ttft["dominant"] == "queue_wait"
+    assert ttft["queue_wait"] == pytest.approx(8.0)
+    assert ttft["prefill"] == pytest.approx(1.0)
+    assert ttft["trace_id"] == trace_id_hex(7)
+    # the decode window has no queue/prefill/migration time: pure stall
+    assert tpot["dominant"] == "decode_stall"
+    assert tpot["decode_stall"] == pytest.approx(3.0)
+    table = format_attribution(rows)
+    assert "queue_wait" in table and "decode_stall" in table
+    # a request inside its SLOs contributes no rows
+    ok = Request(rid=7, prompt=[1], sampling=SamplingParams(), slo_ttft=20.0)
+    ok.arrival, ok.t_first_token = 0.0, 9.0
+    assert attribute_slo_misses(tr, [ok]) == []
+
+
+def test_attribution_counts_migration_window():
+    tr = Tracer()
+    tr.start_trace(4, 0.0)
+    tr.begin(4, "queue_wait", 0.0)
+    tr.end(4, "queue_wait", 1.0)
+    tr.begin(4, "prefill", 1.0)
+    tr.end(4, "prefill", 2.0)
+    tr.begin(4, "decode", 2.0)
+    tr.annotate(4, "migration_transfer", 5.0, duration_s=6.0)
+    tr.finish(4, 12.0)
+    r = Request(rid=4, prompt=[1], sampling=SamplingParams(), slo_tpot=0.5)
+    r.arrival, r.t_first_token = 0.0, 2.0
+    r.token_times = [2.0, 12.0]
+    rows = attribute_slo_misses(tr, [r])
+    assert len(rows) == 1 and rows[0]["slo"] == "tpot"
+    assert rows[0]["migration"] == pytest.approx(6.0)
+    assert rows[0]["dominant"] == "migration"
