@@ -53,6 +53,17 @@ GATES: dict[str, dict[str, tuple[bool, float, float]]] = {
         "prefill_saved_vs_prefix": (True, 0.50, 0.0),
         "directory.mean_ttft_steps": (False, 0.25, 0.5),
     },
+    # transport runs entirely on the logical step clock with seeded fault
+    # schedules, so drain steps, chunk counts, and hit rates are all
+    # bit-reproducible for the pinned seed
+    "transport": {
+        "overlap_speedup_steps": (True, 0.25, 0.0),
+        "overlap.drain_steps": (False, 0.10, 1.0),
+        "overlap.migrated": (True, 0.0, 1.0),
+        "overlap.chunks": (True, 0.25, 1.0),
+        "directory.hit_ratio": (True, 0.10, 0.0),
+        "directory.lossless.cluster_hit_rate": (True, 0.10, 0.0),
+    },
     # the stream sweep runs on the logical step clock, so TTFT percentiles
     # and goodput are seed-deterministic and gateable (unlike the wall-clock
     # TTFT seconds of the other modes)

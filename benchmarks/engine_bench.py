@@ -426,6 +426,208 @@ def run_directory(arch: str = "qwen2-0.5b-smoke", n_requests: int = 48,
     return results
 
 
+def run_transport(arch: str = "qwen2-0.5b-smoke", n_requests: int = 16,
+                  capacity: int = 8, block_size: int = 16,
+                  seed: int = 0, verbose: bool = True,
+                  strict: bool = True) -> dict:
+    """Both planes over the simulated cluster transport (core/transport.py).
+
+    Part A — data plane: a scale-down drain on a bandwidth-limited link (one
+    KV block per step).  ``stopcopy`` ships each migration as one synchronous
+    whole-payload copy that stalls both endpoints for the copy's
+    serialization steps; ``overlap`` streams block-granular chunks with
+    ``migrate_async`` while *both* replicas keep stepping — the destination
+    activates each row the step its last chunk lands.  Overlap must drain
+    the victim in fewer steps: the transfer hides behind compute instead of
+    adding to it.
+
+    Part B — control plane: the cluster cache directory fed over the same
+    fabric, lossless vs. injected faults (drop 30%, reorder 20%, duplicate
+    10% on the unreliable delta class).  Directory routing runs on the stale
+    *delivered* view; periodic anti-entropy reconciliation repairs the
+    losses, so the lossy cluster hit rate must stay within 10% of lossless.
+
+    Everything gated runs on the logical step clock with seeded RNGs (fault
+    schedules included), so the metrics are bit-reproducible for a pinned
+    ``--seed``."""
+    from repro.core.autoscaler import HPAConfig
+    from repro.core.migration import MigrationConfig, MigrationManager
+    from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+    from repro.core.transport import FaultSpec, LinkSpec, Transport
+
+    cfg = get_config(arch)
+    results: dict = {}
+
+    def mk():
+        return InferenceEngine(
+            cfg, capacity=capacity, max_len=96, buckets=(16, 32),
+            kv_backend="paged", block_size=block_size,
+            sched=SchedulerConfig(max_prefill_per_step=4), seed=seed)
+
+    # --- Part A: drain a victim replica, stop-and-copy vs overlapped ------
+    for policy in ("stopcopy", "overlap"):
+        rng = np.random.default_rng(seed)
+        prompts = _shared_prefix_prompts(cfg, rng, n_requests)
+        a, b = mk(), mk()
+        b.params = a.params
+        _warm(a, cfg)
+        _warm(b, cfg)
+        bw = float(a.kv_per_block_bytes())    # link fits one block per step
+        mgr = MigrationManager(MigrationConfig())
+        tp = Transport(LinkSpec(latency_steps=1, bandwidth=bw,
+                                max_in_flight=64))
+        # the survivor takes a light share, the victim the heavy share: the
+        # drain must move live KV, not just requeue cold prompts
+        for rid, p in enumerate(prompts):
+            eng = a if rid % 4 == 0 else b
+            eng.submit(Request(rid=rid, prompt=list(p),
+                               sampling=SamplingParams(max_new_tokens=24)))
+        for _ in range(4):                    # land prefills -> migratable
+            a.step()
+            b.step()
+        # victim's cold queue is control-plane traffic, not a KV transfer
+        while b.scheduler.queue:
+            a.submit(b.scheduler.queue.popleft())
+        drain_steps, stall_steps = 0, 0
+        while ((b.pool.used or b.scheduler.depth()
+                or mgr.transfers_in_flight) and drain_steps < 2000):
+            now = float(drain_steps)
+            for rid2 in [q.rid for q in b.migratable_requests()]:
+                if policy == "stopcopy":
+                    n0 = len(mgr.events)
+                    mgr.migrate(b, a, rid2, now, 1, 0)
+                    for ev in mgr.events[n0:]:
+                        # synchronous copy: both endpoints stall for the
+                        # link-serialization steps of the bytes moved
+                        stall = int(np.ceil(ev.bytes / bw))
+                        drain_steps += stall
+                        stall_steps += stall
+                else:
+                    mgr.migrate_async(b, a, rid2, now, tp, "nb", "na", 1, 0)
+            a.step()
+            b.step()
+            if policy == "overlap":
+                mgr.pump(now, tp)
+                tp.step()
+            drain_steps += 1
+        a.run(max_steps=3000)
+        b.run(max_steps=3000)
+        served = len(a.finished) + len(b.finished)
+        assert served == n_requests, f"{policy}: {served}/{n_requests} served"
+        a.prefix.check_invariants()
+        b.prefix.check_invariants()
+        res = {
+            "drain_steps": drain_steps,
+            "stall_steps": stall_steps,
+            "migrated": mgr.succeeded,
+            "migration_failures": mgr.failed,
+            "bytes_transferred": sum(e.bytes for e in mgr.events),
+            "bytes_full": sum(e.bytes_full for e in mgr.events),
+            "chunks": sum(e.chunks for e in mgr.events),
+            "blocks_skipped": sum(e.blocks_skipped for e in mgr.events),
+        }
+        if policy == "overlap":
+            res["transport_delivered"] = tp.counts["delivered"]
+            res["transport_bytes"] = tp.bytes_delivered
+        results[policy] = res
+    results["overlap_speedup_steps"] = (
+        results["stopcopy"]["drain_steps"]
+        / max(results["overlap"]["drain_steps"], 1))
+
+    # --- Part B: directory over a lossy fabric vs. lossless ---------------
+    dir_res: dict = {}
+    for label, faults in (
+            ("lossless", FaultSpec()),
+            ("lossy", FaultSpec(drop=0.3, reorder=0.2, duplicate=0.1,
+                                seed=seed))):
+        rng = np.random.default_rng(seed)
+        prompts = _tenant_prompts(cfg, rng, 48, block_size=block_size)
+        tp = Transport(LinkSpec(latency_steps=1, bandwidth=float("inf"),
+                                max_in_flight=10_000), faults)
+        ocfg = OrchestratorConfig(
+            min_replicas=2, max_replicas=4, lb_policy="directory",
+            lb_seed=seed,
+            hpa=HPAConfig(metric="queue", target=2.0, min_replicas=2,
+                          max_replicas=4, stabilization_s=8.0,
+                          scale_down_cooldown_s=8.0),
+            control_every_steps=2, transport=tp)
+        orch = Orchestrator(mk, ocfg)
+        plan = [(24, 6, 40), (24, 6, 40)]     # run_directory's churn plan
+        t, rid = 0.0, 0
+        for n_burst, rate, idle in plan:
+            left = n_burst
+            while left > 0:
+                for _ in range(min(rate, left)):
+                    orch.submit(Request(rid=rid, prompt=list(prompts[rid]),
+                                        sampling=SamplingParams(
+                                            max_new_tokens=8)),
+                                now=t)
+                    rid += 1
+                left -= min(rate, left)
+                orch.step(now=t)
+                t += 1.0
+            for _ in range(idle):
+                orch.step(now=t)
+                t += 1.0
+        while orch.pending() and t < 5000.0:
+            orch.step(now=t)
+            t += 1.0
+        done = list(orch.finished)
+        for e in orch.engines:
+            done.extend(e.finished)
+            e.prefix.check_invariants()
+        assert len(done) == rid, f"{label}: {len(done)}/{rid} served"
+        hit = sum(r.prefix_hit_tokens for r in done)
+        ptoks = sum(len(r.prompt) for r in done)
+        dir_res[label] = {
+            "cluster_hit_rate": hit / max(ptoks, 1),
+            "prefix_hit_tokens": hit,
+            "prompt_tokens": ptoks,
+            "migrations": orch.migrations.succeeded,
+            "transport_sent": tp.counts["sent"],
+            "transport_delivered": tp.counts["delivered"],
+            "transport_dropped": tp.counts["dropped"],
+            "transport_duplicated": tp.counts["duplicated"],
+            "transport_reordered": tp.counts["reordered"],
+            "directory_stale_ignored": orch._dir_service.stale_ignored,
+            "steps": t,
+        }
+    dir_res["hit_ratio"] = (
+        dir_res["lossy"]["cluster_hit_rate"]
+        / max(dir_res["lossless"]["cluster_hit_rate"], 1e-9))
+    results["directory"] = dir_res
+
+    if verbose:
+        for policy in ("stopcopy", "overlap"):
+            print(f"--- {policy} drain ---")
+            for k, v in results[policy].items():
+                print(f"{k}: {v}")
+        print(f"overlap speedup (stopcopy/overlap steps): "
+              f"{results['overlap_speedup_steps']:.2f}x")
+        for label in ("lossless", "lossy"):
+            print(f"--- directory over transport: {label} ---")
+            for k, v in dir_res[label].items():
+                print(f"{k}: {v}")
+        print(f"lossy/lossless hit ratio: {dir_res['hit_ratio']:.3f}")
+    ov, sc = results["overlap"], results["stopcopy"]
+    checks = [
+        (ov["migrated"] > 0, "no request streamed over the transport"),
+        (ov["drain_steps"] < sc["drain_steps"],
+         "overlapped streaming did not drain faster than stop-and-copy"),
+        (ov["chunks"] >= ov["migrated"],
+         "async transfers were not block-granular"),
+        (dir_res["lossy"]["transport_dropped"] > 0,
+         "the lossy run injected no loss — the fault schedule is dead"),
+        (dir_res["hit_ratio"] >= 0.9,
+         "directory hit rate under injected loss fell more than 10% "
+         "below lossless"),
+    ]
+    results["check_failures"] = [msg for ok, msg in checks if not ok]
+    if strict and results["check_failures"]:
+        raise AssertionError("; ".join(results["check_failures"]))
+    return results
+
+
 def _poisson_trace(cfg, rng, n: int, qps: float,
                    interactive_frac: float = 0.7) -> list[dict]:
     """Open-loop arrival spec on the logical step clock: Poisson arrivals at
@@ -684,7 +886,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode",
                     choices=["pipeline", "paged", "migrate", "directory",
-                             "stream"],
+                             "stream", "transport"],
                     default="pipeline",
                     help="pipeline: batched/chunked prefill vs single-prefill; "
                          "paged: paged+prefix-cache backend vs dense rows; "
@@ -693,7 +895,11 @@ if __name__ == "__main__":
                          "cache-directory routing vs prefix affinity vs p2c "
                          "under autoscaling churn; stream: open-loop Poisson "
                          "QPS sweep through the per-token event stream, "
-                         "TTFT/TPOT percentiles and SLO goodput, EDF vs FCFS")
+                         "TTFT/TPOT percentiles and SLO goodput, EDF vs FCFS; "
+                         "transport: both planes over the simulated cluster "
+                         "fabric — overlapped block-granular drain vs "
+                         "stop-and-copy, directory hit rate under injected "
+                         "loss vs lossless")
     ap.add_argument("--n", type=int, default=None,
                     help="requests (default: per-mode)")
     ap.add_argument("--seed", type=int, default=0,
@@ -711,11 +917,11 @@ if __name__ == "__main__":
     args = ap.parse_args()
     fn = {"paged": run_paged, "migrate": run_migrate,
           "pipeline": run, "directory": run_directory,
-          "stream": run_stream}[args.mode]
+          "stream": run_stream, "transport": run_transport}[args.mode]
     kwargs = {"seed": args.seed}
     if args.n is not None:
         kwargs["n_requests"] = args.n
-    if args.mode in ("directory", "stream"):
+    if args.mode in ("directory", "stream", "transport"):
         kwargs["strict"] = False     # report failures after writing the json
     if args.mode == "stream" and args.trace:
         kwargs.update(trace=True, trace_out="TRACE_stream.json",

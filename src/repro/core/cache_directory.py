@@ -37,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from repro.serving.prefix_cache import ROOT_CHAIN, chain_key
+from repro.serving.prefix_cache import chain_walk
 
 
 @dataclasses.dataclass
@@ -105,16 +105,11 @@ class ClusterCacheDirectory:
         touch the committed view, and the next reconcile (or scale-down)
         of the replica clears them — by then the real insert events have
         either committed the chains or the optimism was wrong."""
-        chain = ROOT_CHAIN
-        bs = block_size
-        n = 0
         mine = self._intent_replicas.setdefault(replica, {})
-        while n + bs <= len(tokens) - 1:
-            chain = chain_key(chain, tuple(tokens[n : n + bs]))
+        for chain in chain_walk(tokens, block_size):
             if chain not in self._replicas.get(replica, ()):
                 self._intent_chains.setdefault(chain, set()).add(replica)
                 mine[chain] = None
-            n += bs
         while len(mine) > self.max_intents_per_replica:   # FIFO bound
             self._drop_intent(replica, next(iter(mine)))
 
@@ -176,11 +171,8 @@ class ClusterCacheDirectory:
         (mirroring ``PrefixCache.lookup``: the last prompt token is always
         recomputed for first-token logits)."""
         out: dict[int, int] = {}
-        chain = ROOT_CHAIN
-        limit = len(tokens) - 1
         n = 0
-        while n + block_size <= limit:
-            chain = chain_key(chain, tuple(tokens[n : n + block_size]))
+        for chain in chain_walk(tokens, block_size):
             holders = self._chains.get(chain, set())
             intents = self._intent_chains.get(chain, ())
             if not holders and not intents:

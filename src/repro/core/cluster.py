@@ -161,6 +161,10 @@ class ClusterConfig:
     lb_policy: str = "least"
     batch_split: bool = True         # split batches across ready replicas
     seed: int = 0
+    # modeled network hop between consecutive layer microservices (the
+    # activations cross a service boundary; core/transport.py models the
+    # same cost in steps for the serving plane).  0 keeps stages adjacent.
+    hop_latency_s: float = 0.0
 
 
 class SimCluster:
@@ -252,7 +256,7 @@ class SimCluster:
         self.profiler.observe_latency(svc.name, self.now, lat)
         self.profiler.observe_tokens(svc.name, self.now, job.tokens)
         if si + 1 < len(self.services):
-            self._push(self.now, "stage", (jid, si + 1))
+            self._push(self.now + self.cfg.hop_latency_s, "stage", (jid, si + 1))
         else:
             job.t_done = self.now
             self.done.append(self._inflight.pop(jid))

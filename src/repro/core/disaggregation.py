@@ -26,6 +26,7 @@ from repro.core.loadbalancer import LoadBalancer
 from repro.core.metrics import MetricsRegistry
 from repro.core.migration import MigrationConfig, MigrationManager
 from repro.core.tracing import Tracer
+from repro.core.transport import Transport
 from repro.serving.engine import InferenceEngine
 from repro.serving.request import Request, State
 
@@ -49,6 +50,12 @@ class DisaggConfig:
     # waiting for the first token (False restores first-token-only handoff)
     chunk_handoff: bool = True
     migration: MigrationConfig = dataclasses.field(default_factory=MigrationConfig)
+    # simulated cluster transport: with one configured, prefill->decode
+    # handoffs stream block-granular KV chunks over the inter-pool links
+    # ("n{lb_id}" nodes) instead of one synchronous payload copy — the
+    # decode engine reserves the row up front and starts serving it the
+    # step the last chunk lands, overlapped with both pools' compute
+    transport: Transport | None = None
 
 
 @dataclasses.dataclass
@@ -118,6 +125,7 @@ class DisaggregatedServer:
     def step(self, now: float | None = None) -> DisaggStepStats:
         now = time.perf_counter() if now is None else now
         a0, s0 = self.migrations.attempted, self.migrations.succeeded
+        f0 = self.migrations.failed
         for pi, pe in enumerate(self.prefill_pool):
             st = pe.step(now)
             self.events.extend(st.events)
@@ -135,19 +143,31 @@ class DisaggregatedServer:
                                          block_size=getattr(
                                              self.decode_pool[0],
                                              "block_size", 16))
-                self.migrations.migrate(pe, dst, req.rid, now,
-                                        src_idx=pi,
-                                        dst_idx=len(self.prefill_pool)
-                                        + self.decode_pool.index(dst))
+                di = len(self.prefill_pool) + self.decode_pool.index(dst)
+                if self.cfg.transport is None:
+                    self.migrations.migrate(pe, dst, req.rid, now,
+                                            src_idx=pi, dst_idx=di)
+                else:
+                    # stream the handoff: the decode row activates when the
+                    # last chunk lands, prefill keeps stepping meanwhile
+                    self.migrations.migrate_async(
+                        pe, dst, req.rid, now, self.cfg.transport,
+                        f"n{pe.lb_id}", f"n{dst.lb_id}", pi, di)
             # handoff preempts were emitted on the prefill engine between
             # steps; keep them ordered before the decode pool's tokens
             self.events.extend(pe.drain_events())
         for de in self.decode_pool:
             self.events.extend(de.step(now).events)
+        if self.cfg.transport is not None:
+            self.migrations.pump(now, self.cfg.transport)
+            self.cfg.transport.step()
         att = self.migrations.attempted - a0
         ok = self.migrations.succeeded - s0
+        # async handoffs may commit steps after their attempt: count only
+        # explicit refusals as failures, not transfers still in flight
         st = DisaggStepStats(t=now, handoffs_attempted=att,
-                             handoffs_succeeded=ok, handoffs_failed=att - ok)
+                             handoffs_succeeded=ok,
+                             handoffs_failed=self.migrations.failed - f0)
         self.history.append(st)
         return st
 

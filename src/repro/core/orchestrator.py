@@ -27,6 +27,8 @@ from repro.core.migration import MigrationConfig, MigrationManager
 from repro.core.predictor import make_predictor
 from repro.core.profiler import Profiler
 from repro.core.tracing import Tracer
+from repro.core.transport import (DirectoryTransportClient,
+                                  DirectoryTransportService, Transport)
 from repro.serving.engine import InferenceEngine
 from repro.serving.request import Request
 
@@ -51,6 +53,16 @@ class OrchestratorConfig:
     # (deltas stream continuously; reconciliation repairs lost events and
     # orphaned radix descendants).  0 disables periodic reconciliation.
     directory_reconcile_every: int = 4
+    # simulated cluster transport (core/transport.py).  None keeps the
+    # in-process fabric: directory deltas mutate the directory
+    # synchronously and migrations move whole payloads in one call.  With
+    # a Transport, directory deltas/reconciles become messages on the
+    # step clock — routing sees the stale *delivered* view, and injected
+    # faults exercise the conservative-subset invariant — and
+    # rebalance/drain migrations stream block-granular chunks over the
+    # replica links, overlapped with compute on both ends.  Node names:
+    # replicas are "r{lb_id}", the control plane is "ctrl".
+    transport: Transport | None = None
 
 
 class Orchestrator:
@@ -77,6 +89,14 @@ class Orchestrator:
         # cluster-level prefix-cache directory: every paged replica's index
         # deltas stream into it; the "directory" LB policy routes on it
         self.directory = ClusterCacheDirectory()
+        # optional simulated network: the directory's delta/reconcile
+        # traffic and the migration KV chunks ride it when configured
+        self.transport = cfg.transport
+        self._dir_clients: dict[int, DirectoryTransportClient] = {}
+        if self.transport is not None:
+            self._dir_service = DirectoryTransportService(self.directory)
+            self._dir_service.bind(self.transport, "ctrl")
+            self.transport.attach_metrics(self.metrics)
         self.engines: list[InferenceEngine] = [self._spawn()
                                                for _ in range(cfg.min_replicas)]
         self._cold: dict[int, int] = {}
@@ -110,7 +130,16 @@ class Orchestrator:
         self._next_lb_id += 1
         eng.set_tracer(self.tracer)
         eng.set_metrics(self.metrics)
-        eng.attach_cache_directory(self.directory, eng.lb_id)
+        if self.transport is None:
+            eng.attach_cache_directory(self.directory, eng.lb_id)
+        else:
+            # the replica publishes into a transport client, not the
+            # directory object: its deltas become unreliable messages and
+            # the control plane's view goes stale by (at least) link latency
+            client = DirectoryTransportClient(self.transport,
+                                              f"r{eng.lb_id}", "ctrl")
+            self._dir_clients[eng.lb_id] = client
+            eng.attach_cache_directory(client, eng.lb_id)
         return eng
 
     # ------------------------------------------------------------- routing
@@ -186,19 +215,44 @@ class Orchestrator:
                     # published (dense / prefix-disabled)
                     self.engines[i].detach_cache_directory()
                     self.directory.drop_replica(self.engines[i].lb_id)
+                    self._dir_clients.pop(self.engines[i].lb_id, None)
                 self.engines = [e for i, e in enumerate(self.engines)
                                 if i not in removed]
                 self._cold = {}
                 self.scale_history.append((now, len(self.engines)))
 
-        # load-imbalance migration between kept engines
+        # load-imbalance migration between kept engines.  Moves sharing a
+        # link split its bandwidth, so the modeled duration of each stretches
+        # by the link's planned transfer count (the async path measures
+        # contention instead — the transport serializes chunks fairly)
         if len(self.engines) >= 2:
             occs = [e.pool.used / e.capacity for e in self.engines]
-            for src, dst in self.migrations.plan(occs):
+            moves = self.migrations.plan(occs)
+            link_load: dict[tuple[int, int], int] = {}
+            for mv in moves:
+                link_load[mv] = link_load.get(mv, 0) + 1
+            for src, dst in moves:
                 rid = self.migrations.pick_request(self.engines[src])
                 if rid is not None:
-                    self.migrations.migrate(self.engines[src], self.engines[dst],
-                                            rid, now, src, dst)
+                    self._migrate(src, dst, rid, now,
+                                  concurrent=link_load[(src, dst)])
+
+        # dst-full refusals whose backoff elapsed: re-plan each toward the
+        # coolest replica holding room (capped exponential backoff —
+        # a refusal re-arms the timer with a doubled delay)
+        for rid in self.migrations.ready_to_retry(now):
+            holder = next((i for i, e in enumerate(self.engines)
+                           if any(r.rid == rid
+                                  for r in e.migratable_requests())), None)
+            if holder is None:
+                self.migrations.clear_retry(rid)   # finished or requeued
+                continue
+            targets = sorted(
+                (i for i in range(len(self.engines)) if i != holder),
+                key=lambda i: self.engines[i].pool.used
+                / self.engines[i].capacity)
+            if targets:
+                self._migrate(holder, targets[0], rid, now)
 
         # cache-directory anti-entropy + telemetry: deltas stream on every
         # index mutation; the periodic full-state reconcile repairs what
@@ -207,7 +261,11 @@ class Orchestrator:
         every = self.cfg.directory_reconcile_every
         if every and self._controls % every == 0:
             for e in self.engines:
-                e.reconcile_cache_directory(self.directory)
+                # over the transport the reconcile snapshot is itself a
+                # message — it repairs the directory only when it survives
+                # the link (and the next one repairs what this one misses)
+                sink = self._dir_clients.get(e.lb_id, self.directory)
+                e.reconcile_cache_directory(sink)
         # gauge, not a token counter: the util store is a plain windowed
         # float series, which is what an absolute entry count needs
         # (observe_tokens would turn it into a bogus tokens/s rate)
@@ -223,6 +281,22 @@ class Orchestrator:
                      "missed_added", "lookups"):
             self._c_dir.peg(getattr(ds, kind), kind=kind)
 
+    def _migrate(self, src_i: int, dst_i: int, rid: int, now: float,
+                 concurrent: int = 1) -> bool:
+        """One move, on whichever fabric is configured: the synchronous
+        whole-payload handoff, or a block-granular async transfer streamed
+        over the replicas' transport link (the destination starts serving
+        the row as soon as the last chunk lands; both replicas keep
+        stepping meanwhile)."""
+        src, dst = self.engines[src_i], self.engines[dst_i]
+        if self.transport is None:
+            ev = self.migrations.migrate(src, dst, rid, now, src_i, dst_i,
+                                         concurrent=concurrent)
+            return ev is not None
+        return self.migrations.migrate_async(
+            src, dst, rid, now, self.transport,
+            f"r{src.lb_id}", f"r{dst.lb_id}", src_i, dst_i)
+
     def _drain(self, victim: int, keep: list[int], now: float) -> None:
         """Move every live request off a scale-down victim: decode rows and
         chunk-boundary mid-prefill rows alike (the payload carries prefill
@@ -232,9 +306,8 @@ class Orchestrator:
         src = self.engines[victim]
         for rid in [r.rid for r in src.migratable_requests()]:
             for k in keep:
-                ev = self.migrations.migrate(src, self.engines[k], rid, now,
-                                             victim, k)
-                if ev is not None:
+                ok = self._migrate(victim, k, rid, now)
+                if ok:
                     break
                 if not any(r.rid == rid for r in src.migratable_requests()):
                     break  # rollback requeued it; the loop below resubmits
@@ -271,6 +344,12 @@ class Orchestrator:
             # engines between steps; surface them in cluster step order
             for e in self.engines:
                 self.events.extend(e.drain_events())
+        if self.transport is not None:
+            # advance the network one step with the cluster: queued KV
+            # chunks (re)send under backpressure, due messages deliver —
+            # directory deltas apply, finished adoptions commit their rows
+            self.migrations.pump(now, self.transport)
+            self.transport.step()
 
     def drain_events(self) -> list:
         """Return and clear the cluster event stream (cross-replica, in

@@ -128,6 +128,11 @@ class InferenceEngine:
         # per-leaf KV sequence axis length (None: per-row state, e.g. SSM)
         self._seq_lens = [s.shape[s.axes.index("act_kv")]
                           if "act_kv" in s.axes else None for s in spec_leaves]
+        # per-leaf KV sequence axis index in the *dense* layout — the pivot
+        # cross-backend payload conversion reshapes around (None: per-row
+        # state with no block representation => genuinely unconvertible)
+        self._seq_axes = [s.axes.index("act_kv")
+                          if "act_kv" in s.axes else None for s in spec_leaves]
         if self.paged:
             self.block_size = block_size
             self.max_blk = -(-max_len // block_size)
@@ -163,6 +168,12 @@ class InferenceEngine:
         self._consumed: dict[int, int] = {}
         self._fresh: set[int] = set()
         self.rejected_long = 0
+        # in-progress async adoptions (ticket -> reservation state): rows
+        # whose KV is still streaming in over the transport.  Invisible to
+        # stepping/migration — absent from row_req and _prefilling — until
+        # commit_adopt activates them
+        self._pending_adopt: dict[int, dict] = {}
+        self._next_ticket = 0
 
         # jitted programs -----------------------------------------------------
         self._sampler = make_sampler()
@@ -1112,64 +1123,102 @@ class InferenceEngine:
         self.emit_event(PreemptEvent(t=now, rid=rid, reason="migrate"))
         return req, payload
 
-    def _adopt_paged(self, req: Request, payload: dict, row: int) -> bool:
-        """Install a paged payload: re-allocate blocks through the prefix
-        cache (destination-cached full blocks are reused, not rewritten),
-        scatter the transferred slabs, re-link the block table, and donate
-        the request's full blocks into the radix index so subsequent
-        prompts hit them.  Reservation-based admission mirrors
-        ``_admit_paged`` — an adopt that fits now can always grow to the
-        request's peak length without deadlocking the pool."""
-        seq, n_valid = payload["seq"], payload["pos"]
-        n_total = -(-n_valid // self.block_size)
-        future = self._blocks_horizon(req, n_total, False)
-        if self.prefix_enabled:
-            plan = self.prefix.adopt_blocks(seq, n_valid, future,
-                                            self._reserved_total)
-        else:
-            plan = None
-            if n_total + future <= self._paged_available():
-                got = self.prefix.allocate(n_total)
-                plan = (got, 0) if got is not None else None
-        if plan is None:
-            return False
-        blocks, n_keep = plan
-        self._scatter_blocks(payload["blocks"], blocks[n_keep:], n_keep)
-        self._row_blocks[row] = blocks
-        self.block_tables[row, :] = -1
-        self.block_tables[row, : len(blocks)] = blocks
-        self._row_reserved[row] = future
-        self._reserved_total += future
-        if self.prefix_enabled:
-            # donate the transferred *full* blocks (their positions are
-            # immutable now) — the partial tail stays private so this row's
-            # own appends never trigger a copy-on-write
-            self.prefix.insert(seq, blocks, (n_valid // self.block_size)
-                               * self.block_size)
-        req.extras["adopt_hit_blocks"] = n_keep
-        return True
+    def begin_adopt(self, req: Request, payload: dict,
+                    now: float | None = None) -> int | None:
+        """Reserve everything an incoming migration needs *before* any KV
+        lands: a batch row and, on the paged backend, the full block plan —
+        destination-cached full blocks are reused (their refcounts pin them
+        against eviction for the transfer's whole flight), fresh blocks are
+        allocated through the prefix cache with the same reservation-based
+        admission as ``_admit_paged``, so an adoption that starts can always
+        grow to the request's peak length without deadlocking the pool.
 
-    def adopt(self, req: Request, payload: dict, now: float | None = None) -> bool:
-        """Install a migrated request (cache shapes must match: same cfg,
-        capacity-independent, same max_len/block_size; payloads do not
-        convert across KV backends).  Returns False — leaving this engine
-        untouched — when no row or, on the paged backend, no admissible
-        block plan is available."""
+        Returns an opaque ticket for ``feed_adopt``/``commit_adopt``/
+        ``abort_adopt``, or None when no row or no admissible block plan is
+        available (nothing reserved — the caller rolls back at the source).
+        The pending row is invisible to stepping and migration (absent from
+        ``row_req`` and ``_prefilling``) until commit activates it."""
         kind = payload.get("kind", "dense")
         want = "paged" if self.paged else "dense"
         if kind != want:
             raise ValueError(f"cannot adopt a {kind!r} payload on a {want!r} "
-                             "engine — migrate between same-backend replicas")
-        now = time.perf_counter() if now is None else now
+                             "engine — convert the payload first "
+                             "(convert_payload) or migrate same-backend")
         row = self.pool.allocate(req.rid)
         if row is None:
-            return False
+            return None
+        st: dict[str, Any] = {"req": req, "row": row, "payload": payload,
+                              "n_keep": 0, "blocks": None, "chunks": {},
+                              "expected": 1}
         if self.paged:
-            if not self._adopt_paged(req, payload, row):
+            seq, n_valid = payload["seq"], payload["pos"]
+            n_total = -(-n_valid // self.block_size)
+            future = self._blocks_horizon(req, n_total, False)
+            if self.prefix_enabled:
+                plan = self.prefix.adopt_blocks(seq, n_valid, future,
+                                                self._reserved_total)
+            else:
+                plan = None
+                if n_total + future <= self._paged_available():
+                    got = self.prefix.allocate(n_total)
+                    plan = (got, 0) if got is not None else None
+            if plan is None:
                 self.pool.free(row)
-                return False
+                return None
+            blocks, n_keep = plan
+            self._row_blocks[row] = blocks
+            self.block_tables[row, :] = -1
+            self.block_tables[row, : len(blocks)] = blocks
+            self._row_reserved[row] = future
+            self._reserved_total += future
+            st["blocks"], st["n_keep"] = blocks, n_keep
+            # one transfer chunk per block the destination doesn't hold (the
+            # reused prefix blocks never cross the wire); adopt_blocks
+            # guarantees the tail block is fresh, so expected >= 1
+            st["expected"] = payload["n_blocks"] - n_keep
+        self.pos[row] = 0          # no live tokens until commit
+        self._next_ticket += 1
+        self._pending_adopt[self._next_ticket] = st
+        return self._next_ticket
+
+    def feed_adopt(self, ticket: int, index: int, data) -> None:
+        """Land one transfer chunk of an in-progress adoption.  Paged:
+        ``data`` is the per-layer single-block slab for payload block
+        ``n_keep + index``, scattered straight into the reserved pool block
+        (chunks may arrive in any order; duplicates are ignored).  Dense:
+        the single full-row cache tree, buffered host-side — the device
+        scatter happens at commit so an in-flight transfer never races the
+        whole-batch decode writes."""
+        st = self._pending_adopt[ticket]
+        if index in st["chunks"]:
+            return
+        if self.paged:
+            block = st["blocks"][st["n_keep"] + index]
+            self._scatter_blocks(data, [block], 0)
+            st["chunks"][index] = True
         else:
-            self.caches = self._insert(self.caches, payload["caches"],
+            st["chunks"][index] = data
+
+    def commit_adopt(self, ticket: int, now: float | None = None) -> Request:
+        """Activate a fully-transferred adoption: donate the request's full
+        blocks into the radix index (their positions are immutable now — the
+        partial tail stays private so the row's own appends never trigger a
+        copy-on-write), restore position/sampling state, continue the
+        request's trace here, and make the row live for the next step."""
+        now = time.perf_counter() if now is None else now
+        st = self._pending_adopt.pop(ticket)
+        req, row, payload = st["req"], st["row"], st["payload"]
+        assert len(st["chunks"]) >= st["expected"], \
+            "commit_adopt before every chunk landed"
+        if self.paged:
+            seq, n_valid = payload["seq"], payload["pos"]
+            if self.prefix_enabled:
+                self.prefix.insert(seq, st["blocks"],
+                                   (n_valid // self.block_size)
+                                   * self.block_size)
+            req.extras["adopt_hit_blocks"] = st["n_keep"]
+        else:
+            self.caches = self._insert(self.caches, st["chunks"][0],
                                        jnp.asarray([row], jnp.int32))
         self.pos[row] = payload["pos"]
         self._set_row_sampling(row, req)
@@ -1190,7 +1239,109 @@ class InferenceEngine:
             req.state = State.PREFILL
             self.tracer.begin(req.rid, "prefill", now, replica=self._rlabel,
                               migrated_in=True, resume_pos=payload["pos"])
+        return req
+
+    def abort_adopt(self, ticket: int) -> None:
+        """Drop an in-progress adoption and return every reservation."""
+        st = self._pending_adopt.pop(ticket)
+        if self.paged:
+            self._release_row(st["row"], st["req"], insert=False)
+        self.pool.free(st["row"])
+
+    def adopt(self, req: Request, payload: dict, now: float | None = None) -> bool:
+        """Install a migrated request synchronously (cache shapes must
+        match: same cfg, capacity-independent, same max_len/block_size; use
+        ``convert_payload`` across KV backends).  Returns False — leaving
+        this engine untouched — when no row or, on the paged backend, no
+        admissible block plan is available.
+
+        Expressed as begin/feed-all/commit so the synchronous path and the
+        transport's block-granular async path share one implementation —
+        which is what makes them token-identical by construction."""
+        now = time.perf_counter() if now is None else now
+        ticket = self.begin_adopt(req, payload, now)
+        if ticket is None:
+            return False
+        st = self._pending_adopt[ticket]
+        if self.paged:
+            # one-shot scatter of the whole slab, skipping reused blocks
+            self._scatter_blocks(payload["blocks"],
+                                 st["blocks"][st["n_keep"]:], st["n_keep"])
+            st["chunks"] = {i: True for i in range(st["expected"])}
+        else:
+            st["chunks"][0] = payload["caches"]
+        self.commit_adopt(ticket, now)
         return True
+
+    # --------------------------------------- cross-backend payload conversion
+    def can_convert(self, other) -> bool:
+        """Whether a migration payload from ``other`` (the opposite KV
+        backend) is convertible to this engine's layout.  Genuinely
+        unservable shapes — any cache leaf without a KV sequence axis
+        (SSM state, conv tails, ring buffers: no block representation) —
+        are the one case the migration layer still records as a
+        ``backend-mismatch`` failure."""
+        return (self.model.supports_paged()
+                and other.model.supports_paged()
+                and self.max_len == other.max_len
+                and not any(ax is None for ax in self._seq_axes))
+
+    def convert_payload(self, req: Request, payload: dict) -> dict | None:
+        """Rebuild a migration payload from the other KV backend into this
+        engine's layout, leaf by leaf (dense and paged cache trees mirror
+        each other: the block axis sits where the batch axis was, the slot
+        axis where the sequence axis was).  Paged -> dense flattens block
+        slabs back into one padded row; dense -> paged slices the row into
+        ``block_size`` slots.  Positions past ``pos`` are zero-padding the
+        decode mask never reads.  Returns None for shapes ``can_convert``
+        rejects."""
+        kind = payload.get("kind", "dense")
+        want = "paged" if self.paged else "dense"
+        if kind == want:
+            return payload
+        if (any(ax is None for ax in self._seq_axes)
+                or not self.model.supports_paged()):
+            return None
+        pos = payload["pos"]
+        out = {k: v for k, v in payload.items()
+               if k not in ("kind", "seq", "blocks", "n_blocks", "caches")}
+        out["kind"] = want
+        if want == "dense":
+            leaves = []
+            for d, ax, L in zip(jax.tree.leaves(payload["blocks"]),
+                                self._batch_axes, self._seq_lens):
+                nb, slot = d.shape[ax], d.shape[ax + 1]
+                x = d.reshape(d.shape[:ax] + (nb * slot,) + d.shape[ax + 2:])
+                if nb * slot < L:
+                    pad = [(0, 0)] * x.ndim
+                    pad[ax] = (0, L - nb * slot)
+                    x = jnp.pad(x, pad)
+                else:
+                    x = jax.lax.slice_in_dim(x, 0, L, axis=ax)
+                leaves.append(jnp.expand_dims(x, ax))
+            out["caches"] = jax.tree.unflatten(
+                jax.tree.structure(self.caches), leaves)
+        else:
+            bs = self.block_size
+            nb = -(-pos // bs)
+            leaves = []
+            for d, ax, sx in zip(jax.tree.leaves(payload["caches"]),
+                                 self._batch_axes, self._seq_axes):
+                x = jnp.squeeze(d, axis=ax)
+                s = sx - 1 if ax < sx else sx
+                if x.shape[s] < nb * bs:
+                    pad = [(0, 0)] * x.ndim
+                    pad[s] = (0, nb * bs - x.shape[s])
+                    x = jnp.pad(x, pad)
+                else:
+                    x = jax.lax.slice_in_dim(x, 0, nb * bs, axis=s)
+                x = x.reshape(x.shape[:s] + (nb, bs) + x.shape[s + 1:])
+                leaves.append(x)
+            out["seq"] = (list(req.prompt) + list(req.output))[:pos]
+            out["n_blocks"] = nb
+            out["blocks"] = jax.tree.unflatten(
+                jax.tree.structure(self.caches), leaves)
+        return out
 
     # ------------------------------------------------- cluster cache directory
     def attach_cache_directory(self, directory, replica_id: int | None = None) -> None:

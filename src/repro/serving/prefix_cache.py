@@ -35,6 +35,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from collections import OrderedDict
+from typing import Sequence
 
 
 Key = tuple[int, ...]
@@ -50,6 +51,25 @@ def chain_key(parent_chain: int, tokens: Key) -> int:
     lets a cluster directory aggregate per-replica radix trees."""
     h = hashlib.blake2b(f"{parent_chain}/{tokens!r}".encode(), digest_size=8)
     return int.from_bytes(h.digest(), "big")
+
+
+def chain_walk(tokens: Sequence[int], block_size: int,
+               limit: int | None = None) -> list[int]:
+    """Chain hashes of every consecutive-from-root full block of ``tokens``,
+    in prefix order.  ``limit`` defaults to ``len(tokens) - 1``, mirroring
+    ``PrefixCache.lookup`` (the last prompt token is always recomputed for
+    first-token logits).  The shared walk under directory ``announce``/
+    ``overlaps`` and the transport property tests."""
+    if limit is None:
+        limit = len(tokens) - 1
+    out: list[int] = []
+    chain = ROOT_CHAIN
+    n = 0
+    while n + block_size <= limit:
+        chain = chain_key(chain, tuple(tokens[n:n + block_size]))
+        out.append(chain)
+        n += block_size
+    return out
 
 
 @dataclasses.dataclass

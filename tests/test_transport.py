@@ -1,0 +1,407 @@
+"""The simulated cluster transport and both planes refactored onto it:
+delivery semantics (latency, FIFO, bandwidth sharing, bounded queues,
+fault classes, partitions), the cache-directory bridge's loss/reorder
+tolerance (hypothesis-guarded conservative-subset property), async
+block-granular migration's token identity with the synchronous path,
+cross-backend payload conversion, dst-full retry backoff, and per-link
+migration planning."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.cache_directory import ClusterCacheDirectory
+from repro.core.disaggregation import DisaggConfig, DisaggregatedServer
+from repro.core.migration import MigrationConfig, MigrationManager
+from repro.core.transport import (DirectoryTransportClient,
+                                  DirectoryTransportService, FaultSpec,
+                                  LinkSpec, Transport)
+from repro.serving.engine import InferenceEngine
+from repro.serving.request import Request, SamplingParams
+
+ARCH = "qwen2-0.5b-smoke"
+
+
+def _mk(backend="paged", **kw):
+    kw.setdefault("capacity", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("buckets", (8, 16))
+    kw.setdefault("block_size", 8)
+    kw.setdefault("seed", 0)
+    return InferenceEngine(get_config(ARCH), kv_backend=backend, **kw)
+
+
+def _req(rid, prompt=None, max_new=10):
+    return Request(rid=rid, prompt=prompt or list(range(1, 13)),
+                   sampling=SamplingParams(max_new_tokens=max_new))
+
+
+# ---------------------------------------------------------------- fabric
+def test_latency_and_fifo_order():
+    tp = Transport(LinkSpec(latency_steps=3, bandwidth=float("inf")))
+    got = []
+    tp.register("b", "x", lambda m, now: got.append((now, m.payload)))
+    tp.send("a", "b", "x", 1)
+    tp.send("a", "b", "x", 2)
+    tp.step(2)
+    assert got == [], "nothing delivers before the link latency elapses"
+    tp.step()
+    assert got == [(3, 1), (3, 2)], "FIFO at the latency boundary"
+
+
+def test_bandwidth_serialization_and_fair_share():
+    # one 250-byte message on a 100 B/step link: ceil(250/100)=3 steps
+    tp = Transport(LinkSpec(latency_steps=1, bandwidth=100))
+    got = []
+    tp.register("b", "x", lambda m, now: got.append(now))
+    tp.send("a", "b", "x", 0, size_bytes=250)
+    tp.step(5)
+    assert got == [3]
+    # two 100-byte messages sent together share the link: 50 B/step each,
+    # both fully serialized (and delivered, FIFO) at step 2 — a lone one
+    # would take 1 step.  Contention is modeled, not assumed away.
+    tp2 = Transport(LinkSpec(latency_steps=1, bandwidth=100))
+    got2 = []
+    tp2.register("b", "x", lambda m, now: got2.append(now))
+    tp2.send("a", "b", "x", 0, size_bytes=100)
+    tp2.send("a", "b", "x", 1, size_bytes=100)
+    tp2.step(5)
+    assert got2 == [2, 2]
+
+
+def test_bounded_queue_backpressure():
+    tp = Transport(LinkSpec(latency_steps=1, bandwidth=float("inf"),
+                            max_in_flight=2))
+    assert tp.send("a", "b", "x", 0)
+    assert tp.send("a", "b", "x", 1)
+    assert not tp.send("a", "b", "x", 2), "full queue must refuse the send"
+    assert tp.counts["rejected"] == 1
+    tp.step()
+    assert tp.send("a", "b", "x", 2), "drained queue accepts again"
+
+
+def test_faults_spare_the_reliable_class():
+    tp = Transport(LinkSpec(latency_steps=1, bandwidth=float("inf")),
+                   FaultSpec(drop=1.0, seed=0))
+    got = []
+    tp.register("b", "x", lambda m, now: got.append(m.payload))
+    for i in range(4):
+        tp.send("a", "b", "x", ("rel", i), reliable=True)
+        tp.send("a", "b", "x", ("unrel", i), reliable=False)
+    tp.step(3)
+    assert got == [("rel", i) for i in range(4)], \
+        "drop=1.0 eats every unreliable message and no reliable one"
+    assert tp.counts["dropped"] == 4
+
+
+def test_duplicate_fault_delivers_twice():
+    tp = Transport(LinkSpec(latency_steps=1, bandwidth=float("inf")),
+                   FaultSpec(duplicate=1.0, seed=0))
+    got = []
+    tp.register("b", "x", lambda m, now: got.append(m.payload))
+    tp.send("a", "b", "x", 7, reliable=False)
+    tp.step(2)
+    assert got == [7, 7]
+
+
+def test_partition_stalls_without_loss():
+    tp = Transport(LinkSpec(latency_steps=1, bandwidth=float("inf")))
+    got = []
+    tp.register("b", "x", lambda m, now: got.append(m.payload))
+    tp.send("a", "b", "x", 1, reliable=True)
+    tp.partition("a", "b")
+    tp.step(5)
+    assert got == [] and tp.in_flight() == 1, "partitioned traffic waits"
+    tp.heal("a", "b")
+    tp.step()
+    assert got == [1], "healing releases everything queued"
+
+
+# ------------------------------------------------- directory over the wire
+def _truth_equal(directory, truth):
+    for r, chains in truth.items():
+        assert directory.claimed(r) == chains, \
+            (r, directory.claimed(r) ^ chains)
+
+
+def test_directory_bridge_anti_entropy_repairs_loss():
+    """Deterministic loss schedule: dropped deltas leave the directory
+    stale (subset semantics keep routing safe); the next reconcile
+    snapshot restores exact agreement."""
+    directory = ClusterCacheDirectory()
+    tp = Transport(LinkSpec(latency_steps=1, bandwidth=float("inf")),
+                   FaultSpec(drop=1.0, seed=0))
+    DirectoryTransportService(directory).bind(tp, "ctrl")
+    client = DirectoryTransportClient(tp, "r0", "ctrl")
+    for c in (11, 22, 33):
+        client.on_insert(0, c)
+    tp.step(3)
+    assert directory.claimed(0) == set(), "every delta was dropped"
+    tp.faults = FaultSpec()              # network heals
+    client.reconcile(0, {11, 22, 33})
+    tp.quiesce()
+    _truth_equal(directory, {0: {11, 22, 33}})
+
+
+def test_directory_service_ignores_pre_reconcile_stragglers():
+    """A delta generated before a reconcile snapshot but delivered after
+    it must not resurrect state the snapshot superseded."""
+    directory = ClusterCacheDirectory()
+    service = DirectoryTransportService(directory)
+    tp = Transport(LinkSpec(latency_steps=1, bandwidth=float("inf")))
+    service.bind(tp, "ctrl")
+    client = DirectoryTransportClient(tp, "r0", "ctrl")
+    client.on_insert(0, 11)              # seq 1 — held back below
+    client.on_evict(0, 11)               # seq 2 (lost in this scenario)
+    client.reconcile(0, set())           # seq 3: replica truly holds nothing
+    # simulate delivery out of order: reconcile first, then the old insert
+    msgs = sorted(tp._queues[("r0", "ctrl")], key=lambda m: -m.seq)
+    for m in msgs:
+        if m.payload["op"] != "evict":   # the evict delta never arrives
+            service.handle(m, 0)
+    assert directory.claimed(0) == set(), \
+        "the stale insert must not reappear behind the reconcile"
+    assert service.stale_ignored >= 1
+
+
+# ----------------------------------------- async migration token identity
+def _ref_output():
+    e = _mk()
+    e.submit(_req(0))
+    while e.pending():
+        e.step(0.0)
+    return list(e.finished[0].output)
+
+
+def _migrated_output(async_path, warm_steps=4):
+    a, b = _mk(), _mk()
+    b.params = a.params
+    a.submit(_req(0))
+    for _ in range(warm_steps):
+        a.step(0.0)
+    mgr = MigrationManager(MigrationConfig())
+    if not async_path:
+        assert mgr.migrate(a, b, 0, 0.0) is not None
+    else:
+        # one block per step on the wire: the transfer spans several steps
+        # while BOTH engines keep stepping — overlap, not stop-and-copy
+        tp = Transport(LinkSpec(latency_steps=1,
+                                bandwidth=b.kv_per_block_bytes()))
+        assert mgr.migrate_async(a, b, 0, 0.0, tp, "A", "B")
+        t = 0.0
+        while mgr.transfers_in_flight:
+            mgr.pump(t, tp)
+            tp.step()
+            a.step(t)
+            b.step(t)
+            t += 1.0
+        assert mgr.events and mgr.events[-1].chunks > 1, \
+            "the transfer must actually have been chunked"
+    while b.pending():
+        b.step(1.0)
+    return list(b.finished[0].output)
+
+
+def test_async_adoption_token_identical_to_sync():
+    """The acceptance bar: with fault injection off, the block-granular
+    async path and the synchronous whole-payload path produce the same
+    token stream (greedy sampling; both equal the unmigrated run)."""
+    ref = _ref_output()
+    assert _migrated_output(async_path=False) == ref
+    assert _migrated_output(async_path=True) == ref
+
+
+def test_async_adoption_mid_prefill_token_identical():
+    """Chunk-boundary mid-prefill handoff over the transport: the pending
+    row resumes its remaining prompt on the destination, token-identical."""
+    long_prompt = list(range(1, 25))     # chunked on (8, 16) buckets
+    e = _mk()
+    e.submit(_req(0, long_prompt))
+    while e.pending():
+        e.step(0.0)
+    ref = list(e.finished[0].output)
+
+    a, b = _mk(), _mk()
+    b.params = a.params
+    a.submit(_req(0, long_prompt))
+    a.step(0.0)                          # first chunk consumed
+    mgr = MigrationManager(MigrationConfig())
+    tp = Transport(LinkSpec(latency_steps=1,
+                            bandwidth=b.kv_per_block_bytes()))
+    assert mgr.migrate_async(a, b, 0, 0.0, tp, "A", "B")
+    assert mgr.events == [] or mgr.events[-1].phase == "prefill"
+    t = 0.0
+    while mgr.transfers_in_flight:
+        mgr.pump(t, tp)
+        tp.step()
+        a.step(t)
+        b.step(t)
+        t += 1.0
+    assert mgr.events[-1].phase == "prefill"
+    while b.pending():
+        b.step(1.0)
+    assert list(b.finished[0].output) == ref
+
+
+def test_disaggregated_handoff_over_transport_token_identical():
+    def run(transport):
+        srv = DisaggregatedServer(
+            lambda: _mk(),
+            DisaggConfig(prefill_engines=1, decode_engines=2,
+                         transport=transport))
+        for i in range(4):
+            srv.submit(_req(i, [1, 2, 3, 4, 5, 6, 7, 8, 10 + i, 20 + i],
+                            max_new=8), now=0.0)
+        done = srv.run(2000)
+        assert len(done) == 4
+        return {r.rid: list(r.output) for r in done}
+
+    base = run(None)
+    tp = Transport(LinkSpec(latency_steps=1, bandwidth=2048,
+                            max_in_flight=8))
+    assert run(tp) == base
+
+
+# -------------------------------------------- cross-backend conversion
+@pytest.mark.parametrize("src_backend,dst_backend",
+                         [("dense", "paged"), ("paged", "dense")])
+def test_cross_backend_migration_converts_payload(src_backend, dst_backend):
+    ref = _ref_output()                  # backends are token-identical
+    a, b = _mk(src_backend), _mk(dst_backend)
+    b.params = a.params
+    a.submit(_req(0))
+    for _ in range(4):
+        a.step(0.0)
+    mgr = MigrationManager(MigrationConfig())
+    ev = mgr.migrate(a, b, 0, 0.0)
+    assert ev is not None, mgr.failures
+    assert not any(f.reason == "backend-mismatch" for f in mgr.failures)
+    while b.pending():
+        b.step(0.0)
+    assert list(b.finished[0].output) == ref
+    if dst_backend == "paged":
+        b.prefix.check_invariants()
+
+
+def test_backend_mismatch_kept_for_unservable_shapes(monkeypatch):
+    """The failure reason survives exactly for payloads with no block
+    representation (can_convert False — e.g. SSM per-row state)."""
+    a, b = _mk("dense"), _mk("paged")
+    b.params = a.params
+    a.submit(_req(0))
+    for _ in range(4):
+        a.step(0.0)
+    monkeypatch.setattr(b, "can_convert", lambda other: False)
+    mgr = MigrationManager(MigrationConfig())
+    assert mgr.migrate(a, b, 0, 0.0) is None
+    assert mgr.failures[-1].reason == "backend-mismatch"
+    # the source still serves the request — nothing was extracted
+    while a.pending():
+        a.step(0.0)
+    assert len(a.finished) == 1
+
+
+# ------------------------------------------------------- retry backoff
+def test_dst_full_retry_backoff_caps_and_clears():
+    cfg = MigrationConfig(retry_base_steps=2.0, retry_backoff=2.0,
+                          retry_cap_steps=8.0, retry_max_attempts=4)
+    mgr = MigrationManager(cfg)
+    a = _mk()
+    b = _mk(capacity=1, num_blocks=8)    # one row, tiny pool: refuses adopts
+    b.params = a.params
+    b.submit(_req(7, [1, 2, 3, 4, 5, 6, 7, 8, 9], max_new=30))
+    for _ in range(2):
+        b.step(0.0)
+    a.submit(_req(0))
+    for _ in range(4):
+        a.step(0.0)
+    assert mgr.migrate(a, b, 0, 0.0) is None
+    assert mgr.failures[-1].reason == "dst-full"
+    st = mgr.retry_state(0)
+    assert st["attempts"] == 1 and st["next_try"] == pytest.approx(2.0)
+    assert mgr.ready_to_retry(1.0) == [], "backoff not yet elapsed"
+    assert mgr.ready_to_retry(2.0) == [0]
+    # repeated refusals double the delay up to the cap...
+    assert mgr.migrate(a, b, 0, 2.0) is None
+    assert mgr.retry_state(0)["next_try"] == pytest.approx(2.0 + 4.0)
+    assert mgr.migrate(a, b, 0, 6.0) is None
+    assert mgr.retry_state(0)["next_try"] == pytest.approx(6.0 + 8.0)
+    assert mgr.migrate(a, b, 0, 14.0) is None
+    assert mgr.retry_state(0)["next_try"] == pytest.approx(14.0 + 8.0), \
+        "delay is capped at retry_cap_steps"
+    # ...and past max_attempts the move is abandoned
+    assert mgr.ready_to_retry(1e9) == []
+    # success on a roomy destination clears the backoff state
+    c = _mk()
+    c.params = a.params
+    assert mgr.migrate(a, c, 0, 22.0) is not None
+    assert mgr.retry_state(0) is None
+
+
+# ------------------------------------------- per-link planning/contention
+def test_max_concurrent_enforced_per_link():
+    """``max_concurrent`` caps in-flight transfers *per link*, not
+    globally: a saturated link refuses the next transfer (backpressure —
+    retry next tick, no failure recorded) while a different link to a
+    third replica accepts it the same tick."""
+    a, b, c = _mk(), _mk(), _mk()
+    b.params = a.params
+    c.params = a.params
+    a.submit(_req(0))
+    a.submit(_req(1))
+    for _ in range(4):
+        a.step(0.0)
+    mgr = MigrationManager(MigrationConfig(max_concurrent=1))
+    # one block per 4 steps: transfer 0 is still in flight at the refusal
+    tp = Transport(LinkSpec(latency_steps=1,
+                            bandwidth=a.kv_per_block_bytes() / 4))
+    assert mgr.migrate_async(a, b, 0, 0.0, tp, "na", "nb", 0, 1)
+    f0 = mgr.failed
+    assert not mgr.migrate_async(a, b, 1, 0.0, tp, "na", "nb", 0, 1), \
+        "saturated link accepted a second transfer"
+    assert mgr.failed == f0, "a saturated link is backpressure, not failure"
+    assert mgr.migrate_async(a, c, 1, 0.0, tp, "na", "nc", 0, 2)
+    assert mgr.transfers_in_flight == 2
+    # the planner respects the same budget: one move per tick here
+    assert len(mgr.plan([1.0, 0.95, 0.0, 0.05])) == 1
+    for _ in range(200):
+        if not mgr.transfers_in_flight:
+            break
+        mgr.pump(0.0, tp)
+        tp.step()
+    assert mgr.succeeded == 2
+    done = b.run(max_steps=300) + c.run(max_steps=300)
+    assert {r.rid for r in done} == {0, 1}
+
+
+def test_sync_contention_stretches_duration():
+    mgr = MigrationManager(MigrationConfig())
+    t1 = mgr.transfer_time(1_000_000)
+    t2 = mgr.transfer_time(1_000_000, concurrent=2)
+    assert t2 - mgr.cfg.overhead_s == pytest.approx(
+        2 * (t1 - mgr.cfg.overhead_s))
+
+
+def test_async_link_contention_measured_in_duration():
+    """Two transfers sharing one link each see half the bandwidth: their
+    measured duration_s roughly doubles a lone transfer's."""
+    def drain(n_reqs):
+        a, b = _mk(), _mk()
+        b.params = a.params
+        for i in range(n_reqs):
+            a.submit(_req(i, list(range(1, 13)), max_new=20))
+        for _ in range(4):
+            a.step(0.0)
+        mgr = MigrationManager(MigrationConfig(max_concurrent=2))
+        tp = Transport(LinkSpec(latency_steps=1,
+                                bandwidth=b.kv_per_block_bytes()))
+        for i in range(n_reqs):
+            assert mgr.migrate_async(a, b, i, 0.0, tp, "A", "B")
+        t = 0.0
+        while mgr.transfers_in_flight:
+            mgr.pump(t, tp)
+            tp.step()
+            t += 1.0
+            assert t < 500
+        return max(e.duration_s for e in mgr.events)
+
+    lone, shared = drain(1), drain(2)
+    assert shared >= 2 * lone - 1, (lone, shared)

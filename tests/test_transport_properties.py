@@ -1,0 +1,62 @@
+"""Property test (hypothesis-guarded like test_prefix_cache.py): the
+cluster cache directory, fed over the simulated transport, stays a
+conservative subset of replica state under random drop/reorder/duplicate
+schedules, and anti-entropy restores exact agreement once it quiesces."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cache_directory import ClusterCacheDirectory
+from repro.core.transport import (DirectoryTransportClient,
+                                  DirectoryTransportService, FaultSpec,
+                                  LinkSpec, Transport)
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 1),
+                          st.integers(0, 9)), min_size=1, max_size=60),
+       st.floats(0.0, 0.9), st.floats(0.0, 0.9), st.floats(0.0, 0.9),
+       st.integers(0, 100))
+def test_directory_conservative_subset_under_random_faults(
+        ops, p_drop, p_reorder, p_dup, seed):
+    """Random insert/evict/reconcile schedules from two replicas over a
+    lossy, reordering, duplicating link: (a) the directory never claims a
+    chain the replica never inserted (no corruption, no cross-replica
+    leakage), and (b) once the faults clear and one reconcile round
+    quiesces, the claimed sets equal the replica truth exactly — the
+    anti-entropy repair the conservative-subset invariant rests on."""
+    directory = ClusterCacheDirectory()
+    tp = Transport(LinkSpec(latency_steps=1, bandwidth=float("inf"),
+                            max_in_flight=10_000),
+                   FaultSpec(drop=p_drop, reorder=p_reorder,
+                             duplicate=p_dup, seed=seed))
+    DirectoryTransportService(directory).bind(tp, "ctrl")
+    clients = {r: DirectoryTransportClient(tp, f"r{r}", "ctrl")
+               for r in (0, 1)}
+    truth = {0: set(), 1: set()}
+    ever = {0: set(), 1: set()}
+    for op, r, c in ops:
+        if op == 0:
+            truth[r].add(c)
+            ever[r].add(c)
+            clients[r].on_insert(r, c)
+        elif op == 1 and c in truth[r]:
+            truth[r].discard(c)
+            clients[r].on_evict(r, c)
+        else:
+            clients[r].reconcile(r, truth[r])
+        tp.step()
+        for rr in (0, 1):
+            assert directory.claimed(rr) <= ever[rr], \
+                "the directory claimed a chain this replica never inserted"
+    tp.faults = FaultSpec()              # quiesce: clean final anti-entropy
+    for r in (0, 1):
+        clients[r].reconcile(r, truth[r])
+    tp.quiesce()
+    for r in (0, 1):
+        assert directory.claimed(r) == truth[r], \
+            (r, directory.claimed(r) ^ truth[r])
