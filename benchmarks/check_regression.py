@@ -75,6 +75,18 @@ GATES: dict[str, dict[str, tuple[bool, float, float]]] = {
         "qps_1p5.ttft_p90_steps": (False, 0.15, 1.0),
         "goodput_gain_vs_fcfs": (True, 0.0, 0.05),
     },
+    # multi-model registry runs on the logical step clock: served counts,
+    # cold-start step counts, replica states, and the weighted-fair tenant
+    # index are all seed-deterministic
+    "multimodel": {
+        "base.served": (True, 0.0, 0.0),             # exact: all admitted
+        "base.slo_goodput": (True, 0.05, 0.0),
+        "draft.served": (True, 0.0, 0.0),
+        "draft.cold_starts": (True, 0.0, 0.0),       # exact: 2 wakeups
+        "draft.cold_start_steps": (False, 0.0, 0.0),  # exact: spec'd warmup
+        "draft.replicas_final": (False, 0.0, 0.0),   # exact: back to zero
+        "tenant_fairness_jain": (True, 0.05, 0.0),
+    },
 }
 
 

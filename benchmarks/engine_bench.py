@@ -842,6 +842,167 @@ def run_stream(arch: str = "qwen2-0.5b-smoke", n_requests: int = 32,
     return results
 
 
+def _jain(xs: list[float]) -> float:
+    """Jain's fairness index over per-tenant (weight-normalized) service:
+    1.0 = perfectly weight-proportional shares, 1/n = one tenant hogging."""
+    s, s2 = sum(xs), sum(x * x for x in xs)
+    return (s * s) / (len(xs) * s2) if s2 > 0 else 1.0
+
+
+def run_multimodel(arch: str = "qwen2-0.5b-smoke", n_requests: int = 36,
+                   capacity: int = 8, seed: int = 0, verbose: bool = True,
+                   strict: bool = True) -> dict:
+    """Multi-model registry under a tenant-skewed trace: a base endpoint
+    (weighted-fair two-tenant admission) plus a scale-to-zero draft
+    endpoint that cold-starts twice — once mid-burst, once after idling
+    back to zero.
+
+    Entirely on the logical step clock, so served counts, cold-start
+    steps, TTFTs, and the fairness index are seed-deterministic.  Tenant
+    "alpha" submits 3x tenant "beta"'s volume and holds 3x its weight, so
+    weighted-fair shares should match demand: the Jain index over
+    weight-normalized mid-burst served tokens is ~1.0 when the wfq policy
+    honors the weights (FCFS interleaving also lands near 1.0 here — the
+    wfq-specific share test lives in tests/test_endpoints.py; the bench
+    gates that fairness never *regresses*)."""
+    from repro.core.autoscaler import HPAConfig
+    from repro.core.endpoints import (EndpointRegistry, ModelEndpoint,
+                                      TenantQuota)
+    from repro.serving import State
+
+    cfg = get_config(arch)
+    rng = np.random.default_rng(seed)
+    weights = {"alpha": 3.0, "beta": 1.0}
+    reg = EndpointRegistry(
+        [ModelEndpoint(
+            name="base", model=cfg, capacity=capacity, max_len=96,
+            buckets=(16, 32), priority=1, min_replicas=1, max_replicas=2,
+            cold_start_steps=0, seed=seed,
+            hpa=HPAConfig(metric="queue", target=6.0, max_replicas=2,
+                          stabilization_s=8.0, scale_down_cooldown_s=8.0),
+            sched=SchedulerConfig(policy="wfq", tenant_weights=weights,
+                                  max_prefill_per_step=4)),
+         ModelEndpoint(
+            name="draft", model=cfg, capacity=4, max_len=96,
+            buckets=(16, 32), priority=0, min_replicas=0, max_replicas=1,
+            cold_start_steps=4, idle_ticks_to_zero=3,
+            control_every_steps=2, seed=seed + 1)],
+        tenants={t: TenantQuota(weight=w) for t, w in weights.items()})
+
+    def _prompt():
+        return [int(x) for x in rng.integers(0, cfg.vocab_size,
+                                             int(rng.integers(8, 17)))]
+
+    n_draft = 4
+    n_base = n_requests - n_draft
+    base_reqs: list[Request] = []
+    draft_reqs: list[Request] = []
+    rid = 0
+
+    def _submit_draft(t: float, k: int) -> None:
+        nonlocal rid
+        for _ in range(k):
+            r = Request(rid=rid, model="draft", tenant="alpha",
+                        prompt=_prompt(),
+                        sampling=SamplingParams(max_new_tokens=6),
+                        slo_ttft=20.0, slo_tpot=4.0)
+            rid += 1
+            draft_reqs.append(r)
+            reg.submit(r, now=t)
+
+    # saturating burst on base: 4 submissions per step, 3 alpha : 1 beta;
+    # the first draft pair lands mid-burst (cold start #1 overlaps load)
+    t, submitted = 0.0, 0
+    while submitted < n_base:
+        for _ in range(min(4, n_base - submitted)):
+            tenant = "beta" if submitted % 4 == 3 else "alpha"
+            r = Request(rid=rid, model="base", tenant=tenant,
+                        prompt=_prompt(),
+                        sampling=SamplingParams(max_new_tokens=8),
+                        slo_ttft=30.0, slo_tpot=4.0)
+            rid += 1
+            submitted += 1
+            base_reqs.append(r)
+            reg.submit(r, now=t)
+        if t == 2.0:
+            _submit_draft(t, 2)
+        reg.step(t)
+        t += 1.0
+    while reg.pending() and t < 3000.0:
+        reg.step(t)
+        t += 1.0
+    # idle: the draft endpoint must scale back to zero...
+    for _ in range(20):
+        reg.step(t)
+        t += 1.0
+    zero_after_burst = reg.state("draft") == "scaled_to_zero"
+    # ...then cold-start again on the next request (wakeup #2)
+    _submit_draft(t, 2)
+    while reg.pending() and t < 3000.0:
+        reg.step(t)
+        t += 1.0
+    for _ in range(20):
+        reg.step(t)
+        t += 1.0
+
+    done = reg.finished()
+    m = reg.metrics
+    # mid-burst weighted fairness: tokens each tenant had streamed by the
+    # median base token time, normalized by weight (both tenants are
+    # backlogged there, so shares reflect admission policy, not demand)
+    tok_times = sorted(tt for r in base_reqs for tt in r.token_times)
+    t_cut = tok_times[len(tok_times) // 2] if tok_times else 0.0
+    share = {tenant: sum(sum(1 for tt in r.token_times if tt <= t_cut)
+                         for r in base_reqs if r.tenant == tenant)
+             / weights[tenant] for tenant in weights}
+    fairness = _jain(list(share.values()))
+
+    def _ep_res(name: str, reqs: list) -> dict:
+        served = [r for r in reqs if r.state is State.DONE]
+        return {
+            "served": len(served),
+            "slo_goodput": (sum(1 for r in served if r.slo_met())
+                            / max(len(served), 1)),
+            "mean_ttft_steps": float(np.mean([r.ttft for r in served]))
+            if served else 0.0,
+            "replicas_final": len(reg.resolve(name).engines),
+        }
+
+    results: dict = {"base": _ep_res("base", base_reqs),
+                     "draft": _ep_res("draft", draft_reqs)}
+    results["draft"].update(
+        cold_starts=m.get("endpoint_cold_starts_total").value(
+            endpoint="draft"),
+        cold_start_steps=m.get("endpoint_cold_start_steps").value(
+            endpoint="draft"),
+        zero_after_burst=zero_after_burst)
+    results["tenant_fairness_jain"] = fairness
+    results["tenant_share_per_weight"] = share
+    results["steps"] = t
+    if verbose:
+        for name in ("base", "draft"):
+            print(f"--- endpoint {name} ---")
+            for k, v in results[name].items():
+                print(f"{k}: {v}")
+        print(f"tenant_fairness_jain: {fairness:.3f} (shares/weight {share})")
+    checks = [
+        (len(done) == n_requests,
+         f"served {len(done)}/{n_requests}"),
+        (results["draft"]["cold_starts"] == 2,
+         "draft endpoint did not cold-start twice"),
+        (zero_after_burst and results["draft"]["replicas_final"] == 0,
+         "draft endpoint did not scale back to zero when idle"),
+        (fairness >= 0.85,
+         f"weighted tenant shares unfair (jain {fairness:.3f})"),
+        (results["base"]["slo_goodput"] >= 0.5,
+         "base endpoint goodput collapsed"),
+    ]
+    results["check_failures"] = [msg for ok, msg in checks if not ok]
+    if strict and results["check_failures"]:
+        raise AssertionError("; ".join(results["check_failures"]))
+    return results
+
+
 def run(arch: str = "qwen2-0.5b-smoke", n_requests: int = 24,
         capacity: int = 8, seed: int = 0, verbose: bool = True) -> dict:
     cfg = get_config(arch)
@@ -886,7 +1047,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode",
                     choices=["pipeline", "paged", "migrate", "directory",
-                             "stream", "transport"],
+                             "stream", "transport", "multimodel"],
                     default="pipeline",
                     help="pipeline: batched/chunked prefill vs single-prefill; "
                          "paged: paged+prefix-cache backend vs dense rows; "
@@ -899,7 +1060,10 @@ if __name__ == "__main__":
                          "transport: both planes over the simulated cluster "
                          "fabric — overlapped block-granular drain vs "
                          "stop-and-copy, directory hit rate under injected "
-                         "loss vs lossless")
+                         "loss vs lossless; multimodel: two endpoints behind "
+                         "one registry — wfq tenant fairness on the base "
+                         "model, scale-to-zero cold starts on the draft "
+                         "model, priority-aware replica budget")
     ap.add_argument("--n", type=int, default=None,
                     help="requests (default: per-mode)")
     ap.add_argument("--seed", type=int, default=0,
@@ -917,11 +1081,12 @@ if __name__ == "__main__":
     args = ap.parse_args()
     fn = {"paged": run_paged, "migrate": run_migrate,
           "pipeline": run, "directory": run_directory,
-          "stream": run_stream, "transport": run_transport}[args.mode]
+          "stream": run_stream, "transport": run_transport,
+          "multimodel": run_multimodel}[args.mode]
     kwargs = {"seed": args.seed}
     if args.n is not None:
         kwargs["n_requests"] = args.n
-    if args.mode in ("directory", "stream", "transport"):
+    if args.mode in ("directory", "stream", "transport", "multimodel"):
         kwargs["strict"] = False     # report failures after writing the json
     if args.mode == "stream" and args.trace:
         kwargs.update(trace=True, trace_out="TRACE_stream.json",

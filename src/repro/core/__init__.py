@@ -6,6 +6,8 @@ plus the cluster simulator and the real-engine orchestrator that host them.
 """
 from repro.core.autoscaler import Autoscaler, HPAConfig  # noqa: F401
 from repro.core.cache_directory import ClusterCacheDirectory, DirectoryStats  # noqa: F401
+from repro.core.endpoints import (EndpointRegistry, ModelEndpoint,  # noqa: F401
+                                  TenantQuota)
 from repro.core.loadbalancer import LoadBalancer  # noqa: F401
 from repro.core.metrics import (Counter, Gauge, Histogram,  # noqa: F401
                                 MetricsRegistry, parse_exposition)

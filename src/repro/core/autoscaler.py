@@ -44,13 +44,20 @@ class Autoscaler:
         self.decisions: list[tuple[float, int, int, float]] = []  # (t, cur, new, metric)
         self._m_events = None
 
-    def attach_metrics(self, registry) -> None:
-        """Bind autoscaler instruments onto a cluster metrics registry."""
+    def attach_metrics(self, registry, endpoint: str = "default") -> None:
+        """Bind autoscaler instruments onto a cluster metrics registry.
+
+        ``endpoint`` labels every sample so several endpoints' autoscalers
+        can share one registry without clobbering each other (label hygiene:
+        callers pass a non-empty name; the bare orchestrator passes
+        "default")."""
+        self._ep = endpoint or "default"
         self._m_events = registry.counter(
             "autoscaler_scale_events_total", "Scale decisions, by direction",
-            ("direction",))
+            ("direction", "endpoint"))
         self._m_metric = registry.gauge(
-            "autoscaler_metric", "Last metric value the control law saw")
+            "autoscaler_metric", "Last metric value the control law saw",
+            ("endpoint",))
 
     def _raw_desired(self, current: int, metric: float) -> int:
         c = self.cfg
@@ -68,7 +75,7 @@ class Autoscaler:
             self.predictor.observe(t, metric)
             metric = self.predictor.forecast(c.horizon_s)
         if self._m_events is not None:
-            self._m_metric.set(metric)
+            self._m_metric.set(metric, endpoint=self._ep)
         desired = self._raw_desired(current, metric)
         desired = min(max(desired, c.min_replicas), c.max_replicas)
 
@@ -82,7 +89,7 @@ class Autoscaler:
             self._last_up = t
             self.decisions.append((t, current, desired, metric))
             if self._m_events is not None:
-                self._m_events.inc(direction="up")
+                self._m_events.inc(direction="up", endpoint=self._ep)
             return desired
         if desired < current:
             # scale-down stabilization: act on the max desired in the window;
@@ -96,6 +103,6 @@ class Autoscaler:
             self._last_down = t
             self.decisions.append((t, current, stab, metric))
             if self._m_events is not None:
-                self._m_events.inc(direction="down")
+                self._m_events.inc(direction="down", endpoint=self._ep)
             return stab
         return current

@@ -35,8 +35,21 @@ from repro.serving.request import Request
 
 @dataclasses.dataclass
 class OrchestratorConfig:
+    # endpoint identity: non-empty when this orchestrator is one endpoint of
+    # an EndpointRegistry.  It prefixes transport node names and profiler
+    # targets and becomes the {endpoint=...} metric label, so several
+    # orchestrators can share one Transport and one MetricsRegistry.
+    name: str = ""
+    # min_replicas=0 enables scale-to-zero: the endpoint starts with no
+    # engines, spins one up on first request (spawn_replica), and
+    # idle_ticks_to_zero control ticks with nothing pending tear the
+    # replica set back down.  The HPA never proposes 0 (K8s law floors at
+    # 1), so zero-scale is orchestrator policy, not autoscaler output.
     min_replicas: int = 1
     max_replicas: int = 4
+    # control ticks with pending()==0 before a min_replicas=0 endpoint
+    # tears down to zero replicas.  0 disables idle teardown.
+    idle_ticks_to_zero: int = 0
     hpa: HPAConfig = dataclasses.field(default_factory=lambda: HPAConfig(
         metric="queue", target=4.0, max_replicas=4, stabilization_s=5.0,
         scale_down_cooldown_s=5.0))
@@ -61,31 +74,43 @@ class OrchestratorConfig:
     # faults exercise the conservative-subset invariant — and
     # rebalance/drain migrations stream block-granular chunks over the
     # replica links, overlapped with compute on both ends.  Node names:
-    # replicas are "r{lb_id}", the control plane is "ctrl".
+    # replicas are "r{lb_id}", the control plane is "ctrl", both prefixed
+    # "{name}/" when this orchestrator is a named endpoint sharing the
+    # fabric with others.
     transport: Transport | None = None
 
 
 class Orchestrator:
     def __init__(self, make_engine: Callable[[], InferenceEngine],
-                 cfg: OrchestratorConfig = OrchestratorConfig()):
+                 cfg: OrchestratorConfig = OrchestratorConfig(),
+                 tracer: Tracer | None = None,
+                 metrics: MetricsRegistry | None = None):
         self.cfg = cfg
         self.make_engine = make_engine
         self._next_lb_id = 0
+        # endpoint label ("default" for a bare orchestrator — metric labels
+        # never carry empty strings) and the prefix that namespaces this
+        # endpoint's transport nodes / profiler targets on shared fabric
+        self._ep = cfg.name or "default"
+        self._prefix = f"{cfg.name}/" if cfg.name else ""
         # cluster-wide observability: one Tracer + one MetricsRegistry that
         # every replica is rebound onto at spawn, so a migrated request's
-        # spans land in one trace and the exposition covers the whole plane
-        self.tracer = Tracer()
-        self.metrics = MetricsRegistry()
+        # spans land in one trace and the exposition covers the whole plane.
+        # The registry passes shared instances; standalone use builds its own.
+        self.tracer = tracer if tracer is not None else Tracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._g_replicas = self.metrics.gauge(
-            "cluster_replicas", "Live replica count")
+            "cluster_replicas", "Live replica count", ("endpoint",))
         self._g_dir_entries = self.metrics.gauge(
-            "directory_entries", "Cluster cache-directory entries")
+            "directory_entries", "Cluster cache-directory entries",
+            ("endpoint",))
         self._g_dir_chains = self.metrics.gauge(
-            "directory_distinct_chains", "Distinct chains in the directory")
+            "directory_distinct_chains", "Distinct chains in the directory",
+            ("endpoint",))
         self._c_dir = self.metrics.counter(
             "directory_events_total",
             "Directory lifecycle events (inserts / evicts / reconciles / "
-            "repairs)", ("kind",))
+            "repairs)", ("kind", "endpoint"))
         # cluster-level prefix-cache directory: every paged replica's index
         # deltas stream into it; the "directory" LB policy routes on it
         self.directory = ClusterCacheDirectory()
@@ -95,14 +120,19 @@ class Orchestrator:
         self._dir_clients: dict[int, DirectoryTransportClient] = {}
         if self.transport is not None:
             self._dir_service = DirectoryTransportService(self.directory)
-            self._dir_service.bind(self.transport, "ctrl")
+            self._dir_service.bind(self.transport, f"{self._prefix}ctrl")
             self.transport.attach_metrics(self.metrics)
+        # registry hook: called before each autoscaler-driven spawn; a False
+        # return vetoes it (the EndpointRegistry enforces the cluster-wide
+        # replica budget and priority eviction through this)
+        self.replica_gate: Callable[[], bool] | None = None
+        self._idle_ticks = 0
         self.engines: list[InferenceEngine] = [self._spawn()
                                                for _ in range(cfg.min_replicas)]
         self._cold: dict[int, int] = {}
         self.profiler = Profiler(registry=self.metrics)
         self.autoscaler = Autoscaler(cfg.hpa, make_predictor(cfg.predictor))
-        self.autoscaler.attach_metrics(self.metrics)
+        self.autoscaler.attach_metrics(self.metrics, endpoint=self._ep)
         self.balancer = LoadBalancer(cfg.lb_policy, seed=cfg.lb_seed,
                                      directory=self.directory,
                                      directory_load_weight=cfg.directory_load_weight)
@@ -128,6 +158,9 @@ class Orchestrator:
         eng = self.make_engine()
         eng.lb_id = self._next_lb_id
         self._next_lb_id += 1
+        # label hygiene on shared registries: two endpoints both have an
+        # r0 — the endpoint prefix keeps their {replica=...} series apart
+        eng.replica_label = f"{self._prefix}{eng.lb_id}"
         eng.set_tracer(self.tracer)
         eng.set_metrics(self.metrics)
         if self.transport is None:
@@ -137,7 +170,8 @@ class Orchestrator:
             # directory object: its deltas become unreliable messages and
             # the control plane's view goes stale by (at least) link latency
             client = DirectoryTransportClient(self.transport,
-                                              f"r{eng.lb_id}", "ctrl")
+                                              f"{self._prefix}r{eng.lb_id}",
+                                              f"{self._prefix}ctrl")
             self._dir_clients[eng.lb_id] = client
             eng.attach_cache_directory(client, eng.lb_id)
         return eng
@@ -145,7 +179,21 @@ class Orchestrator:
     # ------------------------------------------------------------- routing
     def submit(self, req: Request, now: float | None = None) -> None:
         now = time.perf_counter() if now is None else now
+        # label hygiene: per-tenant metrics/quotas key on this — never let
+        # an unset tenant reach the label plane as an empty string
+        if req.tenant is None:
+            req.tenant = "default"
+        self._idle_ticks = 0
+        if not self.engines:
+            # scale-to-zero wakeup: first request after idle teardown spins
+            # a replica up; the request queues behind its cold start below
+            self.spawn_replica(now)
         live = [e for i, e in enumerate(self.engines) if self._cold.get(i, 0) <= 0]
+        if not live:
+            # every replica is still cold-starting: queue rather than
+            # reject — the scheduler holds the request until the replica
+            # warms and its first step admits it
+            live = list(self.engines)
         key, tokens = None, None
         bs = getattr(live[0], "block_size", 16) if live else 16
         if self.balancer.policy == "prefix":
@@ -175,20 +223,28 @@ class Orchestrator:
     def _control(self, now: float) -> None:
         depth = sum(e.scheduler.depth() for e in self.engines)
         occ = sum(e.pool.used for e in self.engines)
-        self.profiler.observe_util("cluster", now,
+        self.profiler.observe_util(f"{self._prefix}cluster", now,
                                    occ / max(1, sum(e.capacity for e in self.engines)))
         # KV-memory pressure: per-block on paged replicas (real bytes held),
         # per-row on dense — an autoscaler signal alongside queue depth
         cur = len(self.engines)
         kv = sum(e.kv_utilization() for e in self.engines) / max(cur, 1)
-        self.profiler.observe_util("cluster/kv", now, kv)
+        self.profiler.observe_util(f"{self._prefix}cluster/kv", now, kv)
         metric = kv if self.cfg.hpa.metric == "kv_util" else float(depth)
-        new = self.autoscaler.evaluate(now, cur, metric)
+        # a scaled-to-zero endpoint is invisible to the HPA: the K8s law
+        # floors desired at 1, so evaluating at cur=0 would resurrect the
+        # endpoint with no demand.  Wakeup happens in submit().
+        new = self.autoscaler.evaluate(now, cur, metric) if cur > 0 else 0
         if new > cur:
+            spawned = 0
             for i in range(new - cur):
+                if self.replica_gate is not None and not self.replica_gate():
+                    break       # cluster replica budget exhausted
                 self.engines.append(self._spawn())
                 self._cold[len(self.engines) - 1] = self.cfg.cold_start_steps
-            self.scale_history.append((now, new))
+                spawned += 1
+            if spawned:
+                self.scale_history.append((now, len(self.engines)))
         elif new < cur:
             # retire emptiest engines; migrate their live requests out first.
             # An engine that cannot be fully drained (targets full) survives
@@ -202,24 +258,21 @@ class Orchestrator:
                 if self.engines[v].pool.used == 0 and \
                         self.engines[v].scheduler.depth() == 0:
                     removed.append(v)
-            if removed:
-                for i in removed:      # a retired replica's served requests
-                    self.finished.extend(self.engines[i].finished)
-                    # harvest the victim's last events (drain-migration
-                    # preempts) before its engine object is dropped
-                    self.events.extend(self.engines[i].drain_events())
-                    # scale-down invalidation: the departing replica's pool
-                    # dies with it — the directory must stop routing to it.
-                    # drop_replica directly (not only via the sink detach):
-                    # intents must die even for replicas that never
-                    # published (dense / prefix-disabled)
-                    self.engines[i].detach_cache_directory()
-                    self.directory.drop_replica(self.engines[i].lb_id)
-                    self._dir_clients.pop(self.engines[i].lb_id, None)
-                self.engines = [e for i, e in enumerate(self.engines)
-                                if i not in removed]
-                self._cold = {}
-                self.scale_history.append((now, len(self.engines)))
+            self._remove_replicas(removed, now)
+
+        # knative-style scale-to-zero: a min_replicas=0 endpoint with
+        # nothing queued, running, or in flight for idle_ticks_to_zero
+        # consecutive control ticks tears its whole replica set down (the
+        # replicas are empty, so removal needs no drain)
+        if self.cfg.idle_ticks_to_zero and self.cfg.min_replicas == 0 \
+                and self.engines:
+            if self.pending() == 0:
+                self._idle_ticks += 1
+                if self._idle_ticks >= self.cfg.idle_ticks_to_zero:
+                    self._remove_replicas(list(range(len(self.engines))), now)
+                    self._idle_ticks = 0
+            else:
+                self._idle_ticks = 0
 
         # load-imbalance migration between kept engines.  Moves sharing a
         # link split its bandwidth, so the modeled duration of each stretches
@@ -269,17 +322,85 @@ class Orchestrator:
         # gauge, not a token counter: the util store is a plain windowed
         # float series, which is what an absolute entry count needs
         # (observe_tokens would turn it into a bogus tokens/s rate)
-        self.profiler.observe_util("cluster/directory_entries", now,
-                                   float(self.directory.total_entries))
+        self.profiler.observe_util(f"{self._prefix}cluster/directory_entries",
+                                   now, float(self.directory.total_entries))
         # cluster + directory exposition (pegged: DirectoryStats keeps its
         # own cumulative counts)
-        self._g_replicas.set(len(self.engines))
-        self._g_dir_entries.set(self.directory.total_entries)
-        self._g_dir_chains.set(self.directory.distinct_chains)
+        self._g_replicas.set(len(self.engines), endpoint=self._ep)
+        self._g_dir_entries.set(self.directory.total_entries,
+                                endpoint=self._ep)
+        self._g_dir_chains.set(self.directory.distinct_chains,
+                               endpoint=self._ep)
         ds = self.directory.stats
         for kind in ("inserts", "evicts", "reconciles", "stale_dropped",
                      "missed_added", "lookups"):
-            self._c_dir.peg(getattr(ds, kind), kind=kind)
+            self._c_dir.peg(getattr(ds, kind), kind=kind, endpoint=self._ep)
+
+    def _remove_replicas(self, removed: list[int], now: float) -> None:
+        """Shared teardown bookkeeping for scale-down, priority eviction,
+        and idle-to-zero: harvest finished requests and last events, detach
+        and invalidate the directory, drop transport clients, and re-index
+        the cold-start counters of the survivors."""
+        if not removed:
+            return
+        gone = set(removed)
+        for i in removed:          # a retired replica's served requests
+            self.finished.extend(self.engines[i].finished)
+            # harvest the victim's last events (drain-migration preempts)
+            # before its engine object is dropped
+            self.events.extend(self.engines[i].drain_events())
+            # the departing replica's pool dies with it — the directory
+            # must stop routing to it.  drop_replica directly (not only via
+            # the sink detach): intents must die even for replicas that
+            # never published (dense / prefix-disabled)
+            self.engines[i].detach_cache_directory()
+            self.directory.drop_replica(self.engines[i].lb_id)
+            self._dir_clients.pop(self.engines[i].lb_id, None)
+        keep = [i for i in range(len(self.engines)) if i not in gone]
+        self._cold = {n: self._cold[o] for n, o in enumerate(keep)
+                      if self._cold.get(o, 0) > 0}
+        self.engines = [self.engines[i] for i in keep]
+        self.scale_history.append((now, len(self.engines)))
+
+    # --------------------------------------------------- registry surface
+    def spawn_replica(self, now: float) -> float:
+        """Spin up one replica outside the autoscaler loop (scale-to-zero
+        wakeup, registry placement).  Returns the wall-clock seconds the
+        checkpoint-load + compile path took (`make_engine`), which the
+        registry reports as ``cold_start_s``; the logical-clock half of the
+        cold start is ``cfg.cold_start_steps`` ticking down in step()."""
+        t0 = time.perf_counter()
+        self.engines.append(self._spawn())
+        wall = time.perf_counter() - t0
+        self._cold[len(self.engines) - 1] = self.cfg.cold_start_steps
+        self.scale_history.append((now, len(self.engines)))
+        return wall
+
+    def warm_replicas(self) -> int:
+        """Replicas past their cold start (schedulable right now)."""
+        return sum(1 for i in range(len(self.engines))
+                   if self._cold.get(i, 0) <= 0)
+
+    def evict_coolest(self, now: float) -> bool:
+        """Tear down this endpoint's coolest (emptiest) replica so a
+        higher-priority endpoint can use the capacity.  Within the endpoint
+        live rows drain to surviving replicas over the migration machinery;
+        across endpoints this is plain teardown (models differ — KV can't
+        migrate).  The last replica is only evicted when idle: a victim
+        still holding work after the drain survives and the eviction
+        reports failure."""
+        if not self.engines:
+            return False
+        v = min(range(len(self.engines)),
+                key=lambda i: self.engines[i].pool.used)
+        keep = [i for i in range(len(self.engines)) if i != v]
+        if keep:
+            self._drain(v, keep, now)
+        vic = self.engines[v]
+        if vic.pool.used or vic.scheduler.depth():
+            return False
+        self._remove_replicas([v], now)
+        return True
 
     def _migrate(self, src_i: int, dst_i: int, rid: int, now: float,
                  concurrent: int = 1) -> bool:
@@ -295,7 +416,8 @@ class Orchestrator:
             return ev is not None
         return self.migrations.migrate_async(
             src, dst, rid, now, self.transport,
-            f"r{src.lb_id}", f"r{dst.lb_id}", src_i, dst_i)
+            f"{self._prefix}r{src.lb_id}", f"{self._prefix}r{dst.lb_id}",
+            src_i, dst_i)
 
     def _drain(self, victim: int, keep: list[int], now: float) -> None:
         """Move every live request off a scale-down victim: decode rows and
@@ -317,25 +439,27 @@ class Orchestrator:
             self.submit(req, now)
 
     # ------------------------------------------------------------- stepping
-    def step(self, now: float | None = None) -> None:
+    def step(self, now: float | None = None, *,
+             pump_transport: bool = True) -> None:
         now = time.perf_counter() if now is None else now
+        pre = f"{self._prefix}engine"
         for i, eng in enumerate(self.engines):
             if self._cold.get(i, 0) > 0:
                 self._cold[i] -= 1
                 continue
             st = eng.step(now)
             self.events.extend(st.events)
-            self.profiler.observe_latency(f"engine/{i}/decode", now, st.decode_s)
-            self.profiler.observe_util(f"engine/{i}/kv", now, st.kv_util)
+            self.profiler.observe_latency(f"{pre}/{i}/decode", now, st.decode_s)
+            self.profiler.observe_util(f"{pre}/{i}/kv", now, st.kv_util)
             if st.prefill_tokens:
-                self.profiler.observe_latency(f"engine/{i}/prefill", now,
+                self.profiler.observe_latency(f"{pre}/{i}/prefill", now,
                                               st.prefill_s)
-                self.profiler.observe_tokens(f"engine/{i}/prefill", now,
+                self.profiler.observe_tokens(f"{pre}/{i}/prefill", now,
                                              st.prefill_tokens_true)
-                self.profiler.observe_tokens(f"engine/{i}/prefill_padded", now,
+                self.profiler.observe_tokens(f"{pre}/{i}/prefill_padded", now,
                                              st.prefill_tokens_padded)
             if st.prefix_hit_tokens:
-                self.profiler.observe_tokens(f"engine/{i}/prefix_hits", now,
+                self.profiler.observe_tokens(f"{pre}/{i}/prefix_hits", now,
                                              st.prefix_hit_tokens)
         self._steps += 1
         if self._steps % self.cfg.control_every_steps == 0:
@@ -347,9 +471,13 @@ class Orchestrator:
         if self.transport is not None:
             # advance the network one step with the cluster: queued KV
             # chunks (re)send under backpressure, due messages deliver —
-            # directory deltas apply, finished adoptions commit their rows
+            # directory deltas apply, finished adoptions commit their rows.
+            # On a shared fabric the EndpointRegistry passes
+            # pump_transport=False and steps the Transport exactly once per
+            # cluster step after every endpoint has pumped its migrations.
             self.migrations.pump(now, self.transport)
-            self.transport.step()
+            if pump_transport:
+                self.transport.step()
 
     def drain_events(self) -> list:
         """Return and clear the cluster event stream (cross-replica, in

@@ -17,17 +17,28 @@ import sys
 import numpy as np
 
 
-def _build_orchestrator(args, cfg):
+def _build_registry(args, cfg):
+    """Both serve paths run through one EndpointRegistry — single-model
+    serving is simply a one-endpoint registry (the bare ``Orchestrator``
+    constructor still works for library callers)."""
     from repro.core.autoscaler import HPAConfig
-    from repro.core.orchestrator import Orchestrator, OrchestratorConfig
-    from repro.serving import InferenceEngine
+    from repro.core.endpoints import EndpointRegistry, ModelEndpoint
 
-    return Orchestrator(
-        lambda: InferenceEngine(cfg, capacity=args.capacity, max_len=64,
-                                buckets=(8, 16), seed=7),
-        OrchestratorConfig(hpa=HPAConfig(metric="queue", target=3.0,
-                                         max_replicas=args.max_replicas,
-                                         tolerance=0.0, stabilization_s=2.0)))
+    return EndpointRegistry([ModelEndpoint(
+        name=args.arch, model=cfg, capacity=args.capacity,
+        max_replicas=args.max_replicas, cold_start_steps=0,
+        hpa=HPAConfig(metric="queue", target=3.0,
+                      max_replicas=args.max_replicas,
+                      tolerance=0.0, stabilization_s=2.0))])
+
+
+def _print_models(registry) -> None:
+    """The /v1/models surface, as the service banner."""
+    from repro.serving import ModelsAPI
+
+    for m in ModelsAPI(registry).list().data:
+        print(f"model {m.id}: state={m.state} replicas={m.replicas} "
+              f"priority={m.priority}")
 
 
 def _report(done, rejected, total, n_replicas, n_migrations) -> bool:
@@ -45,32 +56,33 @@ def _report(done, rejected, total, n_replicas, n_migrations) -> bool:
     return len(done) + len(rejected) == total
 
 
-def _serve_batch(args, cfg, orch) -> int:
+def _serve_batch(args, cfg, registry) -> int:
     from repro.serving import Request, SamplingParams, State
 
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
         reqs.append(Request(
-            rid=i,
+            rid=i, model=args.arch,
             prompt=[int(x) for x in rng.integers(0, cfg.vocab_size,
                                                  int(rng.integers(4, 14)))],
             sampling=SamplingParams(max_new_tokens=6, temperature=0.7,
                                     top_k=40)))
-        orch.submit(reqs[-1])
-    done = orch.run(max_steps=800)
+        registry.submit(reqs[-1])
+    done = registry.run(max_steps=800)
     rejected = [r for r in reqs if r.state is State.REJECTED]
-    ok = _report(done, rejected, args.requests, len(orch.engines),
+    orch = registry.resolve(args.arch)
+    ok = _report(done, rejected, args.requests, registry.total_replicas(),
                  len(orch.migrations.events))
     return 0 if ok else 1
 
 
-def _serve_stream(args, cfg, orch) -> int:
+def _serve_stream(args, cfg, registry) -> int:
     """Per-token streaming demo: interleaved SSE streams over the cluster
     front-end, printed as frames arrive."""
     from repro.serving import SSE_DONE, CompletionRequest, CompletionsAPI
 
-    api = CompletionsAPI(orch, model=args.arch)
+    api = CompletionsAPI(registry, model=args.arch)
     rng = np.random.default_rng(0)
     n = min(args.requests, 4)        # a readable number of live streams
     gens = []
@@ -78,7 +90,8 @@ def _serve_stream(args, cfg, orch) -> int:
         creq = CompletionRequest(
             prompt=[int(x) for x in rng.integers(0, cfg.vocab_size,
                                                  int(rng.integers(4, 14)))],
-            max_tokens=6, temperature=0.7, top_k=40, stream=True)
+            model=args.arch, max_tokens=6, temperature=0.7, top_k=40,
+            stream=True)
         gens.append(api.stream(creq, now=0.0))
     live, finished = list(gens), 0
     while live:                      # round-robin: frames interleave
@@ -94,7 +107,7 @@ def _serve_stream(args, cfg, orch) -> int:
                     "rejected" else 0
                 sys.stdout.write(SSE_DONE)
     print(f"streamed {finished}/{n} requests to completion on "
-          f"{len(orch.engines)} replicas")
+          f"{registry.total_replicas()} replicas")
     return 0 if finished == n else 1
 
 
@@ -126,16 +139,18 @@ def main(argv=None):
 
     from repro.configs import get_config
     cfg = get_config(args.arch + "-smoke")
-    orch = _build_orchestrator(args, cfg)
-    rc = _serve_stream(args, cfg, orch) if args.stream \
-        else _serve_batch(args, cfg, orch)
+    registry = _build_registry(args, cfg)
+    _print_models(registry)
+    rc = _serve_stream(args, cfg, registry) if args.stream \
+        else _serve_batch(args, cfg, registry)
+    _print_models(registry)
     if args.trace_out:
-        orch.tracer.write_chrome_trace(args.trace_out)
+        registry.tracer.write_chrome_trace(args.trace_out)
         print(f"trace written to {args.trace_out} "
-              f"({sum(1 for _ in orch.tracer.traces())} traces)")
+              f"({sum(1 for _ in registry.tracer.traces())} traces)")
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
-            f.write(orch.metrics.render())
+            f.write(registry.metrics.render())
         print(f"metrics exposition written to {args.metrics_out}")
     return rc
 

@@ -1,6 +1,7 @@
 from repro.serving.api import (SSE_DONE, CompletionChunk,  # noqa: F401
-                               CompletionRequest, CompletionResponse,
-                               CompletionsAPI, StreamDemux)
+                               CompletionError, CompletionRequest,
+                               CompletionResponse, CompletionsAPI,
+                               ModelInfo, ModelList, ModelsAPI, StreamDemux)
 from repro.serving.engine import InferenceEngine, StepStats  # noqa: F401
 from repro.serving.events import (EngineEvent, FinishEvent,  # noqa: F401
                                   FirstTokenEvent, PreemptEvent, TokenEvent)

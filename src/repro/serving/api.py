@@ -48,9 +48,15 @@ def _trace_hex(rid: int) -> str:
 
 @dataclasses.dataclass
 class CompletionRequest:
-    """The ``/v1/completions`` request body (token-id variant)."""
+    """The ``/v1/completions`` request body (token-id variant).
+
+    ``model`` is *required* — it is the route key: against an
+    :class:`~repro.core.endpoints.EndpointRegistry` backend it selects the
+    endpoint (an unknown name returns a :class:`CompletionError`, never a
+    bare exception); against a single-model backend it must match the
+    API's configured model name."""
     prompt: list[int]
-    model: str = "repro-lm"
+    model: str
     max_tokens: int = 16
     temperature: float = 0.0
     top_k: int = 0
@@ -61,6 +67,9 @@ class CompletionRequest:
     # scheduler's deadline priority / the engine's preemption guard
     slo_ttft: float | None = None
     slo_tpot: float | None = None
+    # multi-tenancy: quota + weighted-fair scheduling key (None lands in
+    # the "default" tenant at admission)
+    tenant: str | None = None
 
     def to_request(self, rid: int) -> Request:
         return Request(
@@ -69,7 +78,8 @@ class CompletionRequest:
                                     top_k=self.top_k, top_p=self.top_p,
                                     max_new_tokens=self.max_tokens,
                                     stop_token=self.stop),
-            slo_ttft=self.slo_ttft, slo_tpot=self.slo_tpot)
+            slo_ttft=self.slo_ttft, slo_tpot=self.slo_tpot,
+            model=self.model, tenant=self.tenant)
 
 
 @dataclasses.dataclass
@@ -124,6 +134,75 @@ class CompletionChunk:
 SSE_DONE = "data: [DONE]\n\n"
 
 
+@dataclasses.dataclass
+class CompletionError:
+    """OpenAI-style structured error body (``{"error": {...}}``).
+
+    Returned (sync) or yielded as the only frame (streaming) instead of
+    raising, so API consumers handle bad requests like an HTTP 4xx body
+    rather than a crashed connection."""
+    message: str
+    type: str = "invalid_request_error"
+    param: str | None = None
+    code: str | None = None
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"error": {"message": self.message, "type": self.type,
+                          "param": self.param, "code": self.code}}
+
+    def to_sse(self) -> str:
+        return f"data: {json.dumps(self.to_dict())}\n\n"
+
+
+# ---------------------------------------------------------------- models API
+@dataclasses.dataclass
+class ModelInfo:
+    """One ``/v1/models`` entry, extended with the serving truths the
+    registry knows: lifecycle state, replica count, priority class."""
+    id: str
+    state: str                       # "ready" | "cold" | "scaled_to_zero"
+    replicas: int
+    priority: int
+    object: str = "model"
+    owned_by: str = "repro"
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ModelList:
+    data: list[ModelInfo]
+    object: str = "list"
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class ModelsAPI:
+    """``/v1/models``-shaped read surface over an
+    :class:`~repro.core.endpoints.EndpointRegistry`."""
+
+    def __init__(self, registry):
+        self.registry = registry
+
+    def _info(self, name: str) -> ModelInfo:
+        d = self.registry.describe(name)
+        return ModelInfo(id=d["name"], state=d["state"],
+                         replicas=d["replicas"], priority=d["priority"])
+
+    def list(self) -> ModelList:
+        return ModelList(data=[self._info(n) for n in self.registry.names()])
+
+    def retrieve(self, name: str) -> ModelInfo | CompletionError:
+        if self.registry.resolve(name) is None:
+            return CompletionError(
+                message=f"model {name!r} not found; "
+                        f"available: {self.registry.names()}",
+                param="model", code="model_not_found")
+        return self._info(name)
+
+
 # ------------------------------------------------------------ demux/cursor
 class StreamDemux:
     """Per-rid ordering/dedup over a merged engine event stream.
@@ -163,13 +242,37 @@ class CompletionsAPI:
     ``now``/``dt``: pass ``now`` to run on a logical clock (each backend
     step advances it by ``dt``); leave it ``None`` for wall time.  Multiple
     interleaved ``stream()`` generators share the backend fairly — each
-    pump fans events out to every open stream's buffer."""
+    pump fans events out to every open stream's buffer.
+
+    Routing: a backend exposing ``resolve(name)`` (the
+    :class:`~repro.core.endpoints.EndpointRegistry`) serves every model it
+    knows — ``CompletionRequest.model`` picks the endpoint and an unknown
+    name comes back as a :class:`CompletionError`.  Any other backend
+    serves exactly one model (``model=``) and mismatches error the same
+    way."""
 
     def __init__(self, backend, model: str = "repro-lm"):
         self.backend = backend
         self.model = model
         self._rids = itertools.count()
         self._buffers: dict[int, deque[EngineEvent]] = {}
+
+    def _route_error(self, creq: CompletionRequest) -> CompletionError | None:
+        """Structured unknown-model error, or None when routable."""
+        resolve = getattr(self.backend, "resolve", None)
+        if resolve is not None:
+            if resolve(creq.model) is None:
+                return CompletionError(
+                    message=f"model {creq.model!r} not found; available: "
+                            f"{self.backend.names()}",
+                    param="model", code="model_not_found")
+            return None
+        if creq.model != self.model:
+            return CompletionError(
+                message=f"model {creq.model!r} not found; available: "
+                        f"{[self.model]}",
+                param="model", code="model_not_found")
+        return None
 
     # ------------------------------------------------------------ plumbing
     def _pump(self, now: float | None) -> None:
@@ -193,15 +296,20 @@ class CompletionsAPI:
     def _chunk(self, req: Request, t: float, tokens: list[int],
                finish: str | None) -> CompletionChunk:
         return CompletionChunk(
-            id=f"cmpl-{_trace_hex(req.rid)}", created=t, model=self.model,
+            id=f"cmpl-{_trace_hex(req.rid)}", created=t,
+            model=req.model or self.model,
             choices=[{"index": 0, "tokens": tokens,
                       "finish_reason": finish}])
 
     # ------------------------------------------------------------ sync path
     def create(self, creq: CompletionRequest, now: float | None = None,
-               dt: float = 1.0, max_steps: int = 10_000) -> CompletionResponse:
+               dt: float = 1.0,
+               max_steps: int = 10_000) -> CompletionResponse | CompletionError:
         """Blocking completion: assembled from the same event stream the
         streaming path yields, then checked against ``Request.output``."""
+        err = self._route_error(creq)
+        if err is not None:
+            return err
         t = now
         req = self._submit(creq, t)
         demux = StreamDemux()
@@ -230,8 +338,10 @@ class CompletionsAPI:
             assert tokens == req.output, \
                 "streamed tokens diverged from Request.output"
         created = time.time() if now is None else now
+        # the response echoes the *endpoint* that served the request
         return CompletionResponse(
-            id=f"cmpl-{_trace_hex(req.rid)}", created=created, model=self.model,
+            id=f"cmpl-{_trace_hex(req.rid)}", created=created,
+            model=creq.model,
             choices=[CompletionChoice(index=0, tokens=tokens,
                                       finish_reason=finish)],
             usage=CompletionUsage(prompt_tokens=len(creq.prompt),
@@ -245,7 +355,12 @@ class CompletionsAPI:
                dt: float = 1.0,
                max_steps: int = 10_000) -> Iterator[CompletionChunk]:
         """Yield one chunk per emitted token, then a finish chunk.  Render
-        frames with ``chunk.to_sse()`` (terminate with ``SSE_DONE``)."""
+        frames with ``chunk.to_sse()`` (terminate with ``SSE_DONE``).  An
+        unroutable model yields a single :class:`CompletionError` frame."""
+        err = self._route_error(creq)
+        if err is not None:
+            yield err
+            return
         t = now
         req = self._submit(creq, t)
         demux = StreamDemux()

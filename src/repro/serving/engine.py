@@ -213,7 +213,7 @@ class InferenceEngine:
         # rebind every replica to shared ones via set_tracer/set_metrics.
         from repro.core.metrics import MetricsRegistry
         from repro.core.tracing import Tracer
-        self._rlabel = str(getattr(self, "lb_id", 0))
+        self._rlabel = str(getattr(self, "replica_label", getattr(self, "lb_id", 0)))
         self.tracer = tracer if tracer is not None else Tracer()
         self.metrics: Any = None
         self._bind_instruments(metrics if metrics is not None
@@ -678,7 +678,7 @@ class InferenceEngine:
         """Rebind to a shared (cluster-wide) tracer; also refreshes the
         replica label, which the control plane sets via ``lb_id``."""
         self.tracer = tracer
-        self._rlabel = str(getattr(self, "lb_id", 0))
+        self._rlabel = str(getattr(self, "replica_label", getattr(self, "lb_id", 0)))
 
     def set_metrics(self, registry) -> None:
         """Rebind every instrument onto a shared (cluster-wide) registry."""
@@ -686,7 +686,7 @@ class InferenceEngine:
 
     def _bind_instruments(self, registry) -> None:
         self.metrics = registry
-        self._rlabel = str(getattr(self, "lb_id", 0))
+        self._rlabel = str(getattr(self, "replica_label", getattr(self, "lb_id", 0)))
         self._c_prefill_tok = registry.counter(
             "engine_prefill_tokens_total",
             "Prompt tokens prefilled (true) / compute launched (padded)",

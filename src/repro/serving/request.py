@@ -32,6 +32,12 @@ class Request:
     arrival: float | None = None            # event-clock seconds; stamped at submit
     slo_ttft: float | None = None           # seconds; None = best effort
     slo_tpot: float | None = None
+    # multi-model / multi-tenant identity: ``model`` names the endpoint the
+    # registry routes by; ``tenant`` drives per-tenant quotas and the
+    # weighted-fair scheduler.  The control plane stamps "default" when a
+    # tenant is unset so metric labels never carry empty strings.
+    model: str | None = None
+    tenant: str | None = None
     extras: dict[str, Any] = dataclasses.field(default_factory=dict)  # vlm patches / frames
 
     # --- lifecycle (engine-owned) ---

@@ -4,6 +4,12 @@ Policies:
 * fcfs      — arrival order
 * sjf       — shortest predicted job first (prompt length proxy)
 * slo       — earliest-ttft-deadline first
+* wfq       — weighted-fair across tenants (``Request.tenant``): each
+              admission charges the tenant's virtual time by the request's
+              token cost over its weight, and the tenant with the lowest
+              virtual time always owns the next pick — under saturation,
+              tenants converge to token shares proportional to their
+              ``tenant_weights`` while staying FIFO within a tenant.
 
 Admission per engine step follows Orca-style continuous batching: every
 iteration, free rows are refilled from the queue (up to ``max_prefill_per
@@ -26,7 +32,11 @@ from repro.serving.request import Request, State
 
 @dataclasses.dataclass
 class SchedulerConfig:
-    policy: str = "fcfs"            # fcfs | sjf | slo
+    policy: str = "fcfs"            # fcfs | sjf | slo | wfq
+    # "wfq": tenant -> weight (unlisted tenants weigh 1.0).  A tenant with
+    # weight 3 earns ~3x the admitted tokens of a weight-1 tenant while
+    # both are backlogged.
+    tenant_weights: dict[str, float] | None = None
     max_queue: int = 10_000
     max_prefill_per_step: int = 4
     prefill_token_budget: int | None = None  # per-step prefilled-token cap
@@ -67,6 +77,11 @@ class Scheduler:
         self.cfg = cfg
         self.queue: deque[Request] = deque()
         self.rejected = 0
+        # "wfq" state: per-tenant virtual time (service over weight).  A
+        # tenant first seen mid-run starts at the *minimum* live virtual
+        # time, not zero — an idle tenant must not bank credit it can later
+        # spend starving everyone else.
+        self._vtime: dict[str, float] = {}
         # observability hook: called as on_reject(req, now, reason) for
         # every rejection this scheduler decides ("queue-full" at submit,
         # "timeout" at admission) — the engine binds it so rejected
@@ -125,6 +140,11 @@ class Scheduler:
         n = min(free_slots, self.cfg.max_prefill_per_step, len(self.queue))
         if n <= 0:
             return []
+        if self.cfg.policy == "wfq":
+            picked = self._wfq_pick(n, budget, cost)
+            picked_set = {id(r) for r in picked}
+            self.queue = deque(r for r in self.queue if id(r) not in picked_set)
+            return picked
         ordered = sorted(self.queue, key=lambda r: self._key(r, now))
         if budget is None:
             picked = ordered[:n]
@@ -141,6 +161,45 @@ class Scheduler:
                 spent += c
         picked_set = {id(r) for r in picked}
         self.queue = deque(r for r in self.queue if id(r) not in picked_set)
+        return picked
+
+    def _wfq_pick(self, n: int,
+                  budget: int | None,
+                  cost: Callable[[Request], int] | None) -> list[Request]:
+        """Weighted-fair selection: the backlogged tenant with the lowest
+        virtual time owns each pick (FIFO within the tenant), and every
+        admission advances that tenant's virtual time by the request's full
+        token cost (prompt + max_new_tokens) over its weight — so under
+        saturation admitted tokens converge to weight-proportional shares."""
+        fifos: dict[str, deque[Request]] = {}
+        for r in self.queue:
+            fifos.setdefault(r.tenant or "default", deque()).append(r)
+        # a tenant first seen (or returning from idle) joins at the minimum
+        # live virtual time — no banked credit for having been absent
+        known = [self._vtime[t] for t in fifos if t in self._vtime]
+        base = min(known) if known else 0.0
+        for t in fifos:
+            self._vtime.setdefault(t, base)
+        weights = self.cfg.tenant_weights or {}
+        idx = 1 if self.cfg.budget_counts == "true" else 0
+        picked: list[Request] = []
+        spent = 0
+        while len(picked) < n and fifos:
+            t = min(fifos, key=lambda k: (self._vtime[k], fifos[k][0].arrival))
+            r = fifos[t][0]
+            if budget is not None:
+                c = cost(r) if cost is not None else len(r.prompt)
+                if isinstance(c, tuple):
+                    c = c[idx]
+                if picked and spent + c > budget:
+                    break
+                spent += c
+            w = float(weights.get(t, 1.0))
+            self._vtime[t] += (len(r.prompt) + r.sampling.max_new_tokens) / max(w, 1e-9)
+            picked.append(r)
+            fifos[t].popleft()
+            if not fifos[t]:
+                del fifos[t]
         return picked
 
     def depth(self) -> int:

@@ -386,7 +386,8 @@ def test_completions_api_ids_derive_from_trace_id(rng):
     cfg, eng = _mk()
     api = CompletionsAPI(eng, model=ARCH)
     prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 9)]
-    resp = api.create(CompletionRequest(prompt=list(prompt), max_tokens=4),
+    resp = api.create(CompletionRequest(prompt=list(prompt), model=ARCH,
+                                        max_tokens=4),
                       now=0.0)
     assert resp.x_trace_id is not None
     assert len(resp.x_trace_id) == 16
@@ -396,7 +397,7 @@ def test_completions_api_ids_derive_from_trace_id(rng):
     rid = int(resp.x_trace_id, 16)
     assert eng.tracer.spans(rid) and eng.tracer.verify(rid) == []
 
-    chunks = list(api.stream(CompletionRequest(prompt=list(prompt),
+    chunks = list(api.stream(CompletionRequest(prompt=list(prompt), model=ARCH,
                                                max_tokens=4, stream=True),
                              now=100.0))
     cid = chunks[0].id

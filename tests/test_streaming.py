@@ -229,14 +229,15 @@ def test_completions_api_sync_and_stream_match(rng):
     cfg, eng = _mk()
     api = CompletionsAPI(eng, model=ARCH)
     prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 11)]
-    resp = api.create(CompletionRequest(prompt=list(prompt), max_tokens=6),
+    resp = api.create(CompletionRequest(prompt=list(prompt), model=ARCH,
+                                        max_tokens=6),
                       now=0.0)
     assert resp.choices[0].finish_reason == "length"
     assert len(resp.choices[0].tokens) == 6
     assert resp.usage.total_tokens == 11 + 6
     assert resp.x_ttft is not None
 
-    chunks = list(api.stream(CompletionRequest(prompt=list(prompt),
+    chunks = list(api.stream(CompletionRequest(prompt=list(prompt), model=ARCH,
                                                max_tokens=6, stream=True),
                              now=100.0))
     toks = [c.choices[0]["tokens"][0] for c in chunks
@@ -257,7 +258,8 @@ def test_completions_api_interleaved_streams(rng):
     for i in range(3):
         p = [int(x) for x in rng.integers(0, cfg.vocab_size, 6 + i)]
         want.append(p)
-        gens.append(api.stream(CompletionRequest(prompt=p, max_tokens=5),
+        gens.append(api.stream(CompletionRequest(prompt=p, model="repro-lm",
+                                                 max_tokens=5),
                                now=0.0))
     got = {i: [] for i in range(3)}
     live = list(enumerate(gens))
@@ -277,11 +279,13 @@ def test_completions_api_rejects_oversized_prompt(rng):
     cfg, eng = _mk()
     api = CompletionsAPI(eng)
     resp = api.create(CompletionRequest(
-        prompt=[1] * (eng.max_len + 40), max_tokens=4), now=0.0)
+        prompt=[1] * (eng.max_len + 40), model="repro-lm",
+        max_tokens=4), now=0.0)
     assert resp.choices[0].finish_reason == "rejected"
     assert resp.choices[0].tokens == []
     chunks = list(api.stream(CompletionRequest(
-        prompt=[1] * (eng.max_len + 40), max_tokens=4), now=0.0))
+        prompt=[1] * (eng.max_len + 40), model="repro-lm",
+        max_tokens=4), now=0.0))
     assert len(chunks) == 1
     assert chunks[0].choices[0]["finish_reason"] == "rejected"
 
@@ -300,7 +304,8 @@ def test_completions_api_over_orchestrator(rng):
             stabilization_s=0.0, scale_down_cooldown_s=1e9)))
     api = CompletionsAPI(orch)
     prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, 9)]
-    resp = api.create(CompletionRequest(prompt=prompt, max_tokens=5), now=0.0)
+    resp = api.create(CompletionRequest(prompt=prompt, model="repro-lm",
+                                        max_tokens=5), now=0.0)
     assert len(resp.choices[0].tokens) == 5
     assert resp.choices[0].finish_reason == "length"
 
