@@ -1,5 +1,12 @@
 """Load-prediction ablation (paper §3 'Accurate load prediction').
 
+Promoted into the CI-gated scenario suite: ``engine_bench.py --mode
+proactive`` runs the full goodput-driven reactive-vs-proactive comparison
+(diurnal / flash crowd / tenant hotspot / churn replay on the real
+cluster stack) and embeds this module's deterministic ramp ablation as
+its ``ramp`` result.  Kept runnable standalone for quick iteration on
+the controllers themselves.
+
 Two results:
 
 1. **Ramp trigger time (deterministic unit ablation)** — a linearly rising

@@ -75,6 +75,21 @@ GATES: dict[str, dict[str, tuple[bool, float, float]]] = {
         "qps_1p5.ttft_p90_steps": (False, 0.15, 1.0),
         "goodput_gain_vs_fcfs": (True, 0.0, 0.05),
     },
+    # the proactive scenario suite replays identical seeded traces under
+    # both controllers on the logical step clock: goodputs, gains, TTFT
+    # steps, and scale-up lead are seed-deterministic.  The positive floor
+    # on flash_goodput_gain (baseline * 0.1 after rel tolerance) is the
+    # acceptance criterion that proactive beats reactive on the flash
+    # crowd — a fresh run where the gain drops to <= 0 always fails.
+    "proactive": {
+        "scenarios.flash.proactive.served": (True, 0.0, 0.0),  # exact: all
+        "scenarios.flash.proactive.slo_goodput": (True, 0.05, 0.0),
+        "flash_goodput_gain": (True, 0.90, 0.0),
+        "flash_scaleup_lead_steps": (True, 0.50, 0.0),
+        "scenarios.flash.proactive.p95_ttft_steps": (False, 0.25, 1.0),
+        "mean_goodput_gain": (True, 0.50, 0.02),
+        "ramp.lead_s": (True, 0.25, 0.0),
+    },
     # multi-model registry runs on the logical step clock: served counts,
     # cold-start step counts, replica states, and the weighted-fair tenant
     # index are all seed-deterministic

@@ -11,6 +11,7 @@ roofline, not from here.
 """
 from __future__ import annotations
 
+import math
 import time
 
 import numpy as np
@@ -1003,6 +1004,196 @@ def run_multimodel(arch: str = "qwen2-0.5b-smoke", n_requests: int = 36,
     return results
 
 
+def _proactive_traces(cfg, seed: int) -> dict[str, list[list[tuple]]]:
+    """Per-scenario arrival traces on the logical step clock.
+
+    Each trace is a list of steps; each step is a list of
+    ``(tenant, prompt, max_new)`` arrivals.  Generated once per scenario
+    from a seeded rng and replayed *identically* under both policies, so
+    reactive-vs-proactive differences are controller differences, nothing
+    else."""
+    rng = np.random.default_rng(seed)
+
+    def _req(tenant=None):
+        plen = int(rng.integers(8, 17))
+        prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, plen)]
+        return (tenant, prompt, 8)
+
+    def _trace(lams, tenant=None):
+        return [[_req(tenant) for _ in range(int(rng.poisson(lam)))]
+                for lam in lams]
+
+    traces: dict[str, list[list[tuple]]] = {}
+    # diurnal: two sinusoidal day/night cycles — the forecaster's trend
+    # term should ride the upswings instead of waiting for queue build-up
+    traces["diurnal"] = _trace(
+        [0.15 + 1.0 * 0.5 * (1 + math.sin(2 * math.pi * s / 80 - math.pi / 2))
+         for s in range(160)])
+    # flash crowd: quiet floor, an 8-step linear ramp, a hot plateau that
+    # needs ~max_replicas, then quiet again.  The ramp is the proactive
+    # policy's whole case: extrapolate it and be warm when the plateau
+    # lands, vs react to the queue the plateau causes
+    quiet, hot = 0.1, 2.6
+    traces["flash"] = _trace(
+        [quiet] * 36
+        + [quiet + (hot - quiet) * (i + 1) / 8 for i in range(8)]
+        + [hot] * 48 + [quiet] * 28)
+    # tenant hotspot: a steady background tenant plus one tenant spiking
+    # mid-run — scaling must absorb the hot tenant without dragging the
+    # steady tenant's SLOs down with it
+    steady = _trace([0.5] * 160, tenant="steady")
+    hotspot = _trace([0.0] * 56 + [1.8] * 48 + [0.0] * 56, tenant="hot")
+    traces["hotspot"] = [a + b for a, b in zip(steady, hotspot)]
+    # replay with churn: an on/off square wave (three bursts, long lulls)
+    # that forces the autoscaler up and down repeatedly — the goodput
+    # guard must not let scale-down eat the next burst's headroom
+    wave = ([2.2] * 20 + [0.08] * 28) * 3
+    traces["replay"] = _trace(wave)
+    return traces
+
+
+def _run_proactive_scenario(cfg, trace, policy: str, seed: int, *,
+                            capacity: int = 4, cold_start_steps: int = 8,
+                            control_every: int = 4,
+                            max_replicas: int = 6) -> dict:
+    """One scenario under one controller; logical clock throughout."""
+    from repro.core.autoscaler import HPAConfig
+    from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+    from repro.core.scaling_policy import ProactiveConfig
+    from repro.serving import State
+
+    def mk():
+        return InferenceEngine(cfg, capacity=capacity, max_len=64,
+                               buckets=(8, 16), seed=seed)
+
+    ocfg = OrchestratorConfig(
+        name="bench", min_replicas=1, max_replicas=max_replicas,
+        hpa=HPAConfig(metric="queue", target=6.0, min_replicas=1,
+                      max_replicas=max_replicas, stabilization_s=16.0,
+                      scale_down_cooldown_s=16.0),
+        scaling=ProactiveConfig() if policy == "proactive" else None,
+        cold_start_steps=cold_start_steps, control_every_steps=control_every)
+    orch = Orchestrator(mk, ocfg)
+
+    reqs: list[Request] = []
+    t, rid = 0.0, 0
+    for arrivals in trace:
+        for tenant, prompt, max_new in arrivals:
+            r = Request(rid=rid, tenant=tenant, prompt=list(prompt),
+                        sampling=SamplingParams(max_new_tokens=max_new),
+                        slo_ttft=12.0, slo_tpot=3.0)
+            rid += 1
+            reqs.append(r)
+            orch.submit(r, now=t)
+        orch.step(now=t)
+        t += 1.0
+    while orch.pending() and t < 5000.0:
+        orch.step(now=t)
+        t += 1.0
+
+    done = [r for r in reqs if r.state is State.DONE]
+    assert len(done) == len(reqs), \
+        f"{policy}: {len(done)}/{len(reqs)} served"
+    ttfts = [r.ttft for r in done]
+    ups = [tt for tt, c, nw, _ in orch.autoscaler.decisions if nw > c]
+    replicas = [n for _, n in orch.scale_history]
+    res = {
+        "served": len(done),
+        "slo_goodput": sum(1 for r in done if r.slo_met()) / len(done),
+        "mean_ttft_steps": float(np.mean(ttfts)),
+        "p95_ttft_steps": float(np.percentile(ttfts, 95)),
+        "first_scaleup_step": ups[0] if ups else None,
+        "scale_events": len(orch.scale_history),
+        "replicas_peak": max(replicas, default=1),
+        "replicas_final": len(orch.engines),
+        "steps": t,
+    }
+    by_tenant = {r.tenant for r in done if r.tenant}
+    if len(by_tenant) > 1:
+        for tenant in sorted(by_tenant):
+            sub = [r for r in done if r.tenant == tenant]
+            res[f"goodput_{tenant}"] = \
+                sum(1 for r in sub if r.slo_met()) / len(sub)
+    return res
+
+
+def run_proactive(arch: str = "qwen2-0.5b-smoke", n_requests: int = 0,
+                  seed: int = 0, verbose: bool = True,
+                  strict: bool = True) -> dict:
+    """Proactive goodput-driven autoscaling vs the reactive HPA law across
+    four scenarios — diurnal cycle, flash crowd, tenant hotspot, and a
+    churn-heavy trace replay — each replayed from an identical seeded
+    arrival trace under both controllers (``n_requests`` is ignored: the
+    traces fix the workload).
+
+    The headline number is the flash-crowd goodput gain: the proactive
+    policy forecasts the ramp at the cold-start horizon and jumps straight
+    to ``ceil(demand / learned_capacity)`` replicas, so they are warm when
+    the plateau lands; the reactive law waits for queue depth to cross its
+    target and then ratchets up one ratio step per control period, paying
+    the cold start *inside* the spike.  Also includes the promoted
+    deterministic ramp ablation that used to live in
+    ``benchmarks/burst_proactive.py``.
+
+    Entirely on the logical step clock: goodputs, TTFT steps, scale-up
+    steps, and replica peaks are seed-deterministic and CI-gateable."""
+    from burst_proactive import ramp_trigger_times
+
+    cfg = get_config(arch)
+    traces = _proactive_traces(cfg, seed)
+    results: dict = {"scenarios": {}}
+    for name, trace in traces.items():
+        row: dict = {}
+        for policy in ("reactive", "proactive"):
+            row[policy] = _run_proactive_scenario(cfg, trace, policy, seed)
+        row["goodput_gain"] = (row["proactive"]["slo_goodput"]
+                               - row["reactive"]["slo_goodput"])
+        r_up, p_up = (row["reactive"]["first_scaleup_step"],
+                      row["proactive"]["first_scaleup_step"])
+        row["scaleup_lead_steps"] = \
+            (r_up - p_up) if (r_up is not None and p_up is not None) else None
+        results["scenarios"][name] = row
+    flash = results["scenarios"]["flash"]
+    results["flash_goodput_gain"] = flash["goodput_gain"]
+    results["flash_scaleup_lead_steps"] = flash["scaleup_lead_steps"]
+    results["mean_goodput_gain"] = float(np.mean(
+        [row["goodput_gain"] for row in results["scenarios"].values()]))
+    # promoted unit ablation: reactive vs forecast trigger time on a clean
+    # linear ramp (no queueing dynamics, pure controller lead)
+    results["ramp"] = ramp_trigger_times()
+    if verbose:
+        for name, row in results["scenarios"].items():
+            print(f"--- scenario {name} ---")
+            for policy in ("reactive", "proactive"):
+                r = row[policy]
+                print(f"  {policy}: goodput={r['slo_goodput']:.3f} "
+                      f"p95_ttft={r['p95_ttft_steps']:.0f} "
+                      f"first_up={r['first_scaleup_step']} "
+                      f"peak={r['replicas_peak']} "
+                      f"events={r['scale_events']}")
+            print(f"  goodput_gain={row['goodput_gain']:+.3f} "
+                  f"scaleup_lead={row['scaleup_lead_steps']}")
+        print(f"flash goodput gain: {results['flash_goodput_gain']:+.3f}; "
+              f"ramp lead {results['ramp']['lead_s']:.0f}s")
+    checks = [
+        (flash["goodput_gain"] > 0,
+         f"proactive did not beat reactive goodput on the flash crowd "
+         f"({flash['proactive']['slo_goodput']:.3f} vs "
+         f"{flash['reactive']['slo_goodput']:.3f})"),
+        (flash["scaleup_lead_steps"] is not None
+         and flash["scaleup_lead_steps"] > 0,
+         "proactive scale-up did not lead reactive on the flash crowd"),
+        (results["mean_goodput_gain"] > -0.01,
+         "proactive lost goodput on average across the scenario suite"),
+        (results["ramp"]["lead_s"] > 0,
+         "forecast trigger did not lead reactive on the clean ramp"),
+    ]
+    results["check_failures"] = [msg for ok, msg in checks if not ok]
+    if strict and results["check_failures"]:
+        raise AssertionError("; ".join(results["check_failures"]))
+    return results
+
+
 def run(arch: str = "qwen2-0.5b-smoke", n_requests: int = 24,
         capacity: int = 8, seed: int = 0, verbose: bool = True) -> dict:
     cfg = get_config(arch)
@@ -1047,7 +1238,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode",
                     choices=["pipeline", "paged", "migrate", "directory",
-                             "stream", "transport", "multimodel"],
+                             "stream", "transport", "multimodel",
+                             "proactive"],
                     default="pipeline",
                     help="pipeline: batched/chunked prefill vs single-prefill; "
                          "paged: paged+prefix-cache backend vs dense rows; "
@@ -1063,7 +1255,11 @@ if __name__ == "__main__":
                          "loss vs lossless; multimodel: two endpoints behind "
                          "one registry — wfq tenant fairness on the base "
                          "model, scale-to-zero cold starts on the draft "
-                         "model, priority-aware replica budget")
+                         "model, priority-aware replica budget; "
+                         "proactive: goodput-driven forecast scaling vs "
+                         "the reactive HPA law across diurnal / flash-"
+                         "crowd / tenant-hotspot / churn-replay scenarios "
+                         "on identical seeded traces")
     ap.add_argument("--n", type=int, default=None,
                     help="requests (default: per-mode)")
     ap.add_argument("--seed", type=int, default=0,
@@ -1082,11 +1278,12 @@ if __name__ == "__main__":
     fn = {"paged": run_paged, "migrate": run_migrate,
           "pipeline": run, "directory": run_directory,
           "stream": run_stream, "transport": run_transport,
-          "multimodel": run_multimodel}[args.mode]
+          "multimodel": run_multimodel, "proactive": run_proactive}[args.mode]
     kwargs = {"seed": args.seed}
     if args.n is not None:
         kwargs["n_requests"] = args.n
-    if args.mode in ("directory", "stream", "transport", "multimodel"):
+    if args.mode in ("directory", "stream", "transport", "multimodel",
+                     "proactive"):
         kwargs["strict"] = False     # report failures after writing the json
     if args.mode == "stream" and args.trace:
         kwargs.update(trace=True, trace_out="TRACE_stream.json",

@@ -10,9 +10,15 @@ window to avoid flapping), per-direction cooldowns, and pod cold-start
 latency (handled by the cluster layer: a new replica becomes schedulable
 only after its model shard loads).
 
-Two modes:
+Three modes:
 * reactive  — metric is the current windowed observation (paper setting)
 * proactive — metric is a predictor forecast at the cold-start horizon
+* policy    — a pluggable desired-replica source (e.g.
+  :class:`~repro.core.scaling_policy.ProactiveScalingPolicy`, the
+  goodput-driven planner) computes the raw desired count from
+  :class:`~repro.core.scaling_policy.ScalingSignals`; the HPA behaviors
+  (clamping, stabilization window, cooldowns) still apply to its output,
+  so flap protection is identical across modes.
 """
 from __future__ import annotations
 
@@ -35,9 +41,13 @@ class HPAConfig:
 
 
 class Autoscaler:
-    def __init__(self, cfg: HPAConfig, predictor=None):
+    def __init__(self, cfg: HPAConfig, predictor=None, policy=None):
         self.cfg = cfg
         self.predictor = predictor
+        # pluggable desired-replica source (duck type: on_control_tick(t,
+        # signals), desired_replicas(t, current, signals), .forecast).
+        # Engaged only when evaluate() receives a signals snapshot.
+        self.policy = policy
         self._desired_hist: list[tuple[float, int]] = []
         self._last_up = -1e30
         self._last_down = -1e30
@@ -68,15 +78,26 @@ class Autoscaler:
             return current
         return max(1, math.ceil(current * ratio))
 
-    def evaluate(self, t: float, current: int, metric: float) -> int:
-        """Returns the new replica count (== current when no action)."""
+    def evaluate(self, t: float, current: int, metric: float,
+                 signals=None) -> int:
+        """Returns the new replica count (== current when no action).
+
+        With a policy attached and a ``signals`` snapshot provided, the
+        raw desired count comes from the policy instead of the HPA ratio
+        law; everything after (clamp, stabilization, cooldowns, decision
+        log, metrics) is shared."""
         c = self.cfg
-        if c.proactive and self.predictor is not None:
-            self.predictor.observe(t, metric)
-            metric = self.predictor.forecast(c.horizon_s)
+        if self.policy is not None and signals is not None:
+            self.policy.on_control_tick(t, signals)
+            desired = self.policy.desired_replicas(t, current, signals)
+            metric = self.policy.forecast    # what the decision log records
+        else:
+            if c.proactive and self.predictor is not None:
+                self.predictor.observe(t, metric)
+                metric = self.predictor.forecast(c.horizon_s)
+            desired = self._raw_desired(current, metric)
         if self._m_events is not None:
             self._m_metric.set(metric, endpoint=self._ep)
-        desired = self._raw_desired(current, metric)
         desired = min(max(desired, c.min_replicas), c.max_replicas)
 
         self._desired_hist.append((t, desired))

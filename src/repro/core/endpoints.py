@@ -42,6 +42,7 @@ from typing import Any, Callable
 from repro.core.autoscaler import HPAConfig
 from repro.core.metrics import MetricsRegistry
 from repro.core.orchestrator import Orchestrator, OrchestratorConfig
+from repro.core.scaling_policy import ProactiveConfig
 from repro.core.tracing import Tracer
 from repro.core.transport import Transport
 from repro.serving.request import Request, State
@@ -68,6 +69,10 @@ class ModelEndpoint:
     min_replicas: int = 1                   # 0 => scale-to-zero endpoint
     max_replicas: int = 4
     hpa: HPAConfig | None = None            # None => queue-depth HPA default
+    # proactive goodput-driven scaling (core/scaling_policy.py): when set,
+    # this endpoint's desired replica counts come from the forecast +
+    # capacity + goodput planner instead of the reactive HPA ratio law
+    scaling: ProactiveConfig | None = None
     lb_policy: str = "least"
     sched: SchedulerConfig | None = None    # e.g. policy="wfq" + tenant_weights
     # engine shape (default factory only)
@@ -201,6 +206,7 @@ class EndpointRegistry:
         cfg = OrchestratorConfig(
             name=spec.name, min_replicas=spec.min_replicas,
             max_replicas=spec.max_replicas, hpa=hpa,
+            scaling=spec.scaling,
             lb_policy=spec.lb_policy,
             cold_start_steps=spec.cold_start_steps,
             idle_ticks_to_zero=spec.idle_ticks_to_zero,

@@ -26,7 +26,10 @@ from repro.core.metrics import MetricsRegistry
 from repro.core.migration import MigrationConfig, MigrationManager
 from repro.core.predictor import make_predictor
 from repro.core.profiler import Profiler
-from repro.core.tracing import Tracer
+from repro.core.scaling_policy import (ProactiveConfig,
+                                       ProactiveScalingPolicy,
+                                       ScalingSignals)
+from repro.core.tracing import Tracer, attribute_slo_misses
 from repro.core.transport import (DirectoryTransportClient,
                                   DirectoryTransportService, Transport)
 from repro.serving.engine import InferenceEngine
@@ -62,6 +65,12 @@ class OrchestratorConfig:
     control_every_steps: int = 4
     predictor: str = "holt"
     cold_start_steps: int = 0       # extra steps before a new replica serves
+    # proactive goodput-driven scaling: when set, desired replica counts
+    # come from a ProactiveScalingPolicy (forecast arrivals at the warm-up
+    # horizon over a learned capacity model, arbitrated by SLO goodput)
+    # instead of the reactive HPA ratio law.  The HPA behaviors
+    # (min/max clamp, stabilization, cooldowns) in cfg.hpa still apply.
+    scaling: ProactiveConfig | None = None
     # cluster cache directory: full-state anti-entropy every N control ticks
     # (deltas stream continuously; reconciliation repairs lost events and
     # orphaned radix descendants).  0 disables periodic reconciliation.
@@ -131,7 +140,17 @@ class Orchestrator:
                                                for _ in range(cfg.min_replicas)]
         self._cold: dict[int, int] = {}
         self.profiler = Profiler(registry=self.metrics)
-        self.autoscaler = Autoscaler(cfg.hpa, make_predictor(cfg.predictor))
+        # proactive goodput policy: a per-endpoint planner whose horizon
+        # covers the replica warm-up lag, fed below with arrival/outcome
+        # signals sampled on the control-tick clock
+        self.scaling = None
+        if cfg.scaling is not None:
+            self.scaling = ProactiveScalingPolicy(
+                cfg.scaling, cold_start_steps=cfg.cold_start_steps,
+                control_every_steps=cfg.control_every_steps, name=self._ep)
+            self.scaling.attach_metrics(self.metrics, endpoint=self._ep)
+        self.autoscaler = Autoscaler(cfg.hpa, make_predictor(cfg.predictor),
+                                     policy=self.scaling)
         self.autoscaler.attach_metrics(self.metrics, endpoint=self._ep)
         self.balancer = LoadBalancer(cfg.lb_policy, seed=cfg.lb_seed,
                                      directory=self.directory,
@@ -141,6 +160,12 @@ class Orchestrator:
         self.migrations.attach_metrics(self.metrics)
         self._steps = 0
         self._controls = 0
+        # goodput-loop accounting: tokens served since the last control
+        # tick, the tick's step stamp, and the rids already scored against
+        # their SLOs (each finished request is scored exactly once)
+        self._served_tokens = 0
+        self._last_control_step = 0
+        self._scored_rids: set[int] = set()
         self.scale_history: list[tuple[float, int]] = []
         # requests that completed on replicas since retired by scale-down
         self.finished: list[Request] = []
@@ -184,6 +209,11 @@ class Orchestrator:
         if req.tenant is None:
             req.tenant = "default"
         self._idle_ticks = 0
+        if self.scaling is not None:
+            # arrival work signal for the forecaster: what serving this
+            # request will cost end to end, in tokens
+            self.scaling.note_arrival(
+                now, len(req.prompt) + req.sampling.max_new_tokens)
         if not self.engines:
             # scale-to-zero wakeup: first request after idle teardown spins
             # a replica up; the request queues behind its cold start below
@@ -231,10 +261,37 @@ class Orchestrator:
         kv = sum(e.kv_utilization() for e in self.engines) / max(cur, 1)
         self.profiler.observe_util(f"{self._prefix}cluster/kv", now, kv)
         metric = kv if self.cfg.hpa.metric == "kv_util" else float(depth)
+        signals = None
+        if self.scaling is not None:
+            # snapshot for the proactive policy: queue backlog in work
+            # tokens, tokens served since the last tick, warm replicas —
+            # all on the logical step clock
+            qtok = sum(len(r.prompt) + r.sampling.max_new_tokens
+                       for e in self.engines for r in e.scheduler.queue)
+            signals = ScalingSignals(
+                queue_depth=depth, queue_tokens=qtok,
+                served_tokens=self._served_tokens,
+                steps=max(self._steps - self._last_control_step, 1),
+                warm_replicas=self.warm_replicas(), total_replicas=cur)
+            self._served_tokens = 0
+            self._last_control_step = self._steps
+            # goodput loop: score requests that finished since the last
+            # tick and attribute their SLO misses (PR 6's training signal)
+            fresh = [r for r in self._iter_finished()
+                     if r.rid not in self._scored_rids]
+            if fresh:
+                self._scored_rids.update(r.rid for r in fresh)
+                with_slo = [r for r in fresh
+                            if r.slo_ttft is not None
+                            or r.slo_tpot is not None]
+                rows = attribute_slo_misses(self.tracer, with_slo) \
+                    if with_slo else []
+                self.scaling.observe_outcomes(fresh, rows)
         # a scaled-to-zero endpoint is invisible to the HPA: the K8s law
         # floors desired at 1, so evaluating at cur=0 would resurrect the
         # endpoint with no demand.  Wakeup happens in submit().
-        new = self.autoscaler.evaluate(now, cur, metric) if cur > 0 else 0
+        new = self.autoscaler.evaluate(now, cur, metric, signals=signals) \
+            if cur > 0 else 0
         if new > cur:
             spawned = 0
             for i in range(new - cur):
@@ -335,6 +392,13 @@ class Orchestrator:
         for kind in ("inserts", "evicts", "reconciles", "stale_dropped",
                      "missed_added", "lookups"):
             self._c_dir.peg(getattr(ds, kind), kind=kind, endpoint=self._ep)
+
+    def _iter_finished(self):
+        """Every finished request the cluster currently knows: harvested
+        from retired replicas plus each live engine's local list."""
+        yield from self.finished
+        for e in self.engines:
+            yield from e.finished
 
     def _remove_replicas(self, removed: list[int], now: float) -> None:
         """Shared teardown bookkeeping for scale-down, priority eviction,
@@ -449,6 +513,7 @@ class Orchestrator:
                 continue
             st = eng.step(now)
             self.events.extend(st.events)
+            self._served_tokens += st.tokens_out + st.prefill_tokens_true
             self.profiler.observe_latency(f"{pre}/{i}/decode", now, st.decode_s)
             self.profiler.observe_util(f"{pre}/{i}/kv", now, st.kv_util)
             if st.prefill_tokens:

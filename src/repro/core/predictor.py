@@ -6,6 +6,8 @@ by least squares.  All share observe(t, v) / forecast(horizon_s).
 """
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
 
@@ -19,7 +21,7 @@ class EWMA:
             self.alpha * v + (1 - self.alpha) * self.level
 
     def forecast(self, horizon_s: float = 0.0) -> float:
-        return self.level or 0.0
+        return max(0.0, self.level or 0.0)
 
 
 class HoltWinters:
@@ -46,10 +48,14 @@ class HoltWinters:
 
 
 class WindowedAR:
-    """AR(p) over the last ``window`` samples, refit on demand."""
+    """AR(p) over the last ``window`` samples, refit on demand.
 
-    def __init__(self, order: int = 4, window: int = 64):
-        self.order, self.window = order, window
+    ``dt`` is the seconds between consecutive observations: it converts
+    the shared ``forecast(horizon_s)`` contract into the number of
+    one-step iterations the fitted model rolls forward."""
+
+    def __init__(self, order: int = 4, window: int = 64, dt: float = 1.0):
+        self.order, self.window, self.dt = order, window, dt
         self.hist: list[float] = []
 
     def observe(self, t: float, v: float) -> None:
@@ -68,14 +74,25 @@ class WindowedAR:
         coef, *_ = np.linalg.lstsq(X, y, rcond=None)
         return coef
 
-    def forecast(self, horizon_s: float = 0.0, steps: int = 1) -> float:
+    def forecast(self, horizon_s: float = 0.0, steps: int | None = None) -> float:
+        """Roll the fitted AR(p) forward ``ceil(horizon_s / dt)`` steps (at
+        least one).  ``steps`` overrides the conversion for callers that
+        already think in model steps."""
+        if steps is None:
+            steps = math.ceil(horizon_s / self.dt) if horizon_s > 0 else 1
         coef = self._fit()
         if coef is None:
-            return self.hist[-1] if self.hist else 0.0
+            return max(0.0, self.hist[-1]) if self.hist else 0.0
         h = list(self.hist)
         for _ in range(max(1, steps)):
             x = np.asarray(h[-self.order:] + [1.0])
-            h.append(float(x @ coef))
+            # iterated AR forecasts can diverge when the fitted poles sit
+            # outside the unit circle; keep every iterate finite so a long
+            # horizon degrades to a clamped number, never inf/nan
+            nxt = float(x @ coef)
+            if not math.isfinite(nxt):
+                return max(0.0, self.hist[-1])
+            h.append(min(max(nxt, -1e12), 1e12))
         return max(0.0, h[-1])
 
 

@@ -1,0 +1,282 @@
+"""Autoscaling control-law edges and proactive-vs-reactive mini scenarios.
+
+The scenario tests run a deterministic fluid-queue model (tokens in /
+tokens out per logical step, replica warm-up lag, no engine, no noise):
+fast enough for the fast tier, exact enough to assert *when* each
+controller fires.  The full-engine versions of these scenarios live in
+``benchmarks/engine_bench.py --mode proactive``."""
+import math
+
+import pytest
+
+from repro.core.autoscaler import Autoscaler, HPAConfig
+from repro.core.scaling_policy import (ProactiveConfig,
+                                       ProactiveScalingPolicy,
+                                       ScalingSignals)
+
+
+def _sig(**kw) -> ScalingSignals:
+    kw.setdefault("warm_replicas", 1)
+    kw.setdefault("total_replicas", 1)
+    return ScalingSignals(**kw)
+
+
+class _StubPolicy:
+    """Fixed-output policy: isolates the autoscaler's shared behaviors
+    (clamp, stabilization, cooldowns) from any planning logic."""
+
+    def __init__(self, wants):
+        self.wants = list(wants)
+        self.forecast = 0.0
+
+    def on_control_tick(self, t, sig):
+        pass
+
+    def desired_replicas(self, t, current, sig):
+        return self.wants.pop(0) if self.wants else current
+
+
+# ------------------------------------------------- shared control-law edges
+def test_tolerance_dead_band_boundary():
+    """|ratio - 1| <= tolerance holds exactly at the boundary; one epsilon
+    past it acts."""
+    a = Autoscaler(HPAConfig(target=1.0, tolerance=0.25, max_replicas=100))
+    assert a.evaluate(0.0, 4, 1.25) == 4          # ratio 1.25: on the edge
+    assert a.evaluate(1.0, 4, 1.3) == 6           # past it: ceil(4*1.3)
+
+
+def test_scale_down_stabilization_window_max():
+    """Scale-down lands on the *max* desired inside the window — not the
+    latest, not the min — so one quiet sample can't flush capacity that a
+    recent sample still justified."""
+    a = Autoscaler(HPAConfig(target=1.0, tolerance=0.0, stabilization_s=30.0,
+                             scale_down_cooldown_s=0.0, max_replicas=10))
+    assert a.evaluate(0.0, 8, 1.0) == 8           # desired 8 in window
+    assert a.evaluate(10.0, 8, 0.75) == 8         # desired 6: max(8,6)=8 holds
+    # window slides past the 8-sample; the 6-sample now rules the floor
+    assert a.evaluate(31.0, 8, 0.25) == 6         # desired 2, max(6,2)=6
+    assert a.evaluate(62.0, 6, 0.25) == 2         # both stale: down to 2
+
+
+def test_fresh_scale_up_blocks_down_flap():
+    """The down cooldown counts from the last event in EITHER direction: a
+    fresh scale-up pins the floor for scale_down_cooldown_s even when the
+    metric collapses immediately (K8s semantics)."""
+    a = Autoscaler(HPAConfig(target=1.0, tolerance=0.0, stabilization_s=0.0,
+                             scale_down_cooldown_s=20.0, max_replicas=10))
+    assert a.evaluate(0.0, 2, 3.0) == 6           # up event at t=0
+    assert a.evaluate(5.0, 6, 0.1) == 6           # down blocked by fresh up
+    assert a.evaluate(19.0, 6, 0.1) == 6          # still inside cooldown
+    assert a.evaluate(21.0, 6, 0.1) == 1          # cooldown expired
+
+
+def test_min_max_clamp_applies_to_policy_output():
+    """A policy's raw desired count passes through the same min/max clamp
+    as the HPA law — a runaway plan cannot exceed the replica budget."""
+    a = Autoscaler(HPAConfig(target=1.0, min_replicas=2, max_replicas=5,
+                             tolerance=0.0, stabilization_s=0.0,
+                             scale_down_cooldown_s=0.0),
+                   policy=_StubPolicy([50, 0]))
+    assert a.evaluate(0.0, 3, 0.0, signals=_sig()) == 5
+    assert a.evaluate(1.0, 5, 0.0, signals=_sig()) == 2
+
+
+def test_policy_output_still_stabilized_and_cooled():
+    """Flap protection is shared: a policy that oscillates wildly still
+    cannot flap the replica count inside the stabilization window."""
+    a = Autoscaler(HPAConfig(target=1.0, tolerance=0.0, stabilization_s=30.0,
+                             scale_down_cooldown_s=30.0, max_replicas=10),
+                   policy=_StubPolicy([8, 1, 1, 1]))
+    assert a.evaluate(0.0, 2, 0.0, signals=_sig()) == 8
+    assert a.evaluate(5.0, 8, 0.0, signals=_sig()) == 8    # cooldown + window
+    assert a.evaluate(15.0, 8, 0.0, signals=_sig()) == 8
+    assert a.evaluate(61.0, 8, 0.0, signals=_sig()) < 8    # both expired
+
+
+def test_reactive_paths_unchanged_without_signals():
+    """A policy-bearing autoscaler called without signals falls back to
+    the plain HPA law — existing call sites keep their behavior."""
+    a = Autoscaler(HPAConfig(target=1.0, tolerance=0.0, max_replicas=10),
+                   policy=_StubPolicy([9, 9, 9]))
+    assert a.evaluate(0.0, 2, 2.0) == 4           # ratio law, not the stub
+
+
+# ----------------------------------------------------- policy unit behavior
+def test_policy_horizon_defaults_to_warmup_plus_control_period():
+    p = ProactiveScalingPolicy(cold_start_steps=8, control_every_steps=4)
+    assert p.horizon_steps == 12
+    q = ProactiveScalingPolicy(ProactiveConfig(horizon_steps=3),
+                               cold_start_steps=8, control_every_steps=4)
+    assert q.horizon_steps == 3
+
+
+def test_capacity_learned_only_while_backlogged():
+    """Idle ticks (queue empty) must not erode the capacity estimate: an
+    idle replica serves 0 tokens/step but can do far better."""
+    p = ProactiveScalingPolicy(ProactiveConfig(capacity_decay=1.0))
+    p.on_control_tick(0.0, _sig(queue_depth=5, served_tokens=40, steps=4))
+    assert p.capacity == pytest.approx(10.0)
+    p.on_control_tick(4.0, _sig(queue_depth=0, served_tokens=0, steps=4))
+    assert p.capacity == pytest.approx(10.0)      # idle tick ignored
+    p.on_control_tick(8.0, _sig(queue_depth=3, served_tokens=24, steps=4))
+    assert p.capacity == pytest.approx(6.0)       # backlogged tick learned
+
+
+def test_goodput_guard_blocks_scale_down():
+    """With goodput under the floor the policy refuses to surrender
+    replicas even when the forecast says fewer would do."""
+    class _Req:
+        def __init__(self, ok):
+            self.slo_ttft, self.slo_tpot, self._ok = 1.0, None, ok
+
+        def slo_met(self):
+            return self._ok
+
+    p = ProactiveScalingPolicy(ProactiveConfig(goodput_floor=0.9))
+    p.observe_outcomes([_Req(False), _Req(False), _Req(True)], [])
+    assert p.goodput() == pytest.approx(1 / 3)
+    p.on_control_tick(0.0, _sig())                # forecast ~0 => wants 1
+    assert p.desired_replicas(0.0, 4, _sig()) == 4    # guard holds at 4
+    p.observe_outcomes([_Req(True) for _ in range(60)], [])
+    assert p.desired_replicas(0.0, 4, _sig()) == 1    # goodput recovered
+
+
+def test_queue_miss_bias_boosts_and_decays():
+    """A queue_wait-dominated SLO miss means the plan was short: the next
+    miss_patience control ticks bid current + queue_miss_boost even when
+    the forecast alone would not."""
+    p = ProactiveScalingPolicy(ProactiveConfig(miss_patience=2,
+                                               queue_miss_boost=2))
+    p.observe_outcomes([], [{"dominant": "queue_wait"}])
+    p.on_control_tick(0.0, _sig())
+    assert p.desired_replicas(0.0, 3, _sig()) == 5
+    p.on_control_tick(4.0, _sig())
+    assert p.desired_replicas(4.0, 3, _sig()) == 5
+    p.on_control_tick(8.0, _sig())                # patience exhausted
+    # bias gone and the outcome window is healthy: the ~0 forecast rules
+    assert p.desired_replicas(8.0, 3, _sig()) == 1
+    p2 = ProactiveScalingPolicy(ProactiveConfig(miss_patience=1))
+    p2.observe_outcomes([], [{"dominant": "prefill"}])   # not queue-dominated
+    p2.on_control_tick(0.0, _sig())
+    assert p2.desired_replicas(0.0, 3, _sig()) == 1
+
+
+def test_policy_forecast_error_tracks_realized_load():
+    """The realized-error gauge compares the forecast made one horizon ago
+    against the arrival rate actually observed when that horizon lands."""
+    p = ProactiveScalingPolicy(ProactiveConfig(predictor="ewma",
+                                               horizon_steps=4),
+                               control_every_steps=4)
+    for tick in range(6):
+        for _ in range(10):
+            p.note_arrival(float(4 * tick), 4.0)  # steady 10 req * 4 tok
+        p.on_control_tick(float(4 * tick), _sig(steps=4))
+    # steady load, EWMA forecast == rate => realized error ~ 0
+    assert p.forecast == pytest.approx(10.0)
+    assert p.forecast_error == pytest.approx(0.0, abs=1e-9)
+
+
+# ------------------------------------------------- deterministic scenarios
+def _simulate(mode: str, lams: list[float], *, cold: int = 8,
+              control_every: int = 4, cap: float = 20.0,
+              work: float = 20.0, max_replicas: int = 8):
+    """Fluid-queue cluster: ``lams[t] * work`` tokens arrive at step t,
+    each warm replica drains ``cap`` tokens/step, scale-ups take ``cold``
+    steps to warm.  Returns (first_scaleup_step, replica_trace)."""
+    hpa = HPAConfig(metric="queue", target=6.0, tolerance=0.1,
+                    min_replicas=1, max_replicas=max_replicas,
+                    stabilization_s=16.0, scale_down_cooldown_s=16.0)
+    policy = None
+    if mode == "proactive":
+        policy = ProactiveScalingPolicy(
+            ProactiveConfig(), cold_start_steps=cold,
+            control_every_steps=control_every)
+    scaler = Autoscaler(hpa, policy=policy)
+    queue, replicas, served_acc = 0.0, 1, 0.0
+    warming: list[tuple[int, int]] = []       # (ready_step, count)
+    first_up, trace = None, []
+    for t, lam in enumerate(lams):
+        arr = lam * work
+        if policy is not None and arr > 0:
+            policy.note_arrival(float(t), arr)
+        warm = replicas - sum(c for ready, c in warming if ready > t)
+        served = min(queue + arr, warm * cap)
+        queue += arr - served
+        served_acc += served
+        if t % control_every == 0:
+            depth = queue / work
+            if policy is not None:
+                sig = ScalingSignals(
+                    queue_depth=int(math.ceil(depth)),
+                    queue_tokens=int(queue), served_tokens=int(served_acc),
+                    steps=control_every, warm_replicas=max(warm, 0),
+                    total_replicas=replicas)
+                new = scaler.evaluate(float(t), replicas, 0.0, signals=sig)
+            else:
+                new = scaler.evaluate(float(t), replicas, depth)
+            served_acc = 0.0
+            if new > replicas:
+                if first_up is None:
+                    first_up = t
+                warming.append((t + cold, new - replicas))
+            replicas = new
+        trace.append(replicas)
+    return first_up, trace
+
+
+COLD = 8
+
+
+def _flash_lams(quiet=0.1, hot=3.0, ramp=8, onset=24):
+    return ([quiet] * onset
+            + [quiet + (hot - quiet) * (i + 1) / ramp for i in range(ramp)]
+            + [hot] * 60)
+
+
+def test_mini_flash_proactive_leads_by_warmup():
+    """Flash crowd: the forecaster extrapolates the ramp and fires at
+    least a full warm-up earlier than the queue-triggered reactive law —
+    the whole point of forecasting at the cold-start horizon."""
+    lams = _flash_lams()
+    re_up, _ = _simulate("reactive", lams, cold=COLD)
+    pr_up, _ = _simulate("proactive", lams, cold=COLD)
+    assert re_up is not None and pr_up is not None
+    assert pr_up <= re_up - COLD, \
+        f"proactive fired at {pr_up}, reactive at {re_up}: lead < {COLD}"
+
+
+def test_mini_diurnal_proactive_leads_by_warmup():
+    """Diurnal upswing: a smooth sinusoidal rise is the friendliest
+    possible signal for the trend term — the lead must cover warm-up."""
+    lams = [0.1 + 2.4 * 0.5 * (1 + math.sin(2 * math.pi * t / 96
+                                            - math.pi / 2))
+            for t in range(96)]
+    re_up, _ = _simulate("reactive", lams, cold=COLD)
+    pr_up, _ = _simulate("proactive", lams, cold=COLD)
+    assert re_up is not None and pr_up is not None
+    assert pr_up <= re_up - COLD, \
+        f"proactive fired at {pr_up}, reactive at {re_up}: lead < {COLD}"
+
+
+def test_mini_hotspot_proactive_leads_by_warmup():
+    """Tenant hotspot: steady background plus one tenant ramping hot.
+    The aggregate arrival signal carries the ramp; the forecast fires
+    before the queue the hotspot causes ever builds."""
+    steady = [0.4] * 96
+    hot = [0.0] * 32 + [2.6 * min((i + 1) / 8, 1.0) for i in range(64)]
+    lams = [a + b for a, b in zip(steady, hot)]
+    re_up, _ = _simulate("reactive", lams, cold=COLD)
+    pr_up, _ = _simulate("proactive", lams, cold=COLD)
+    assert re_up is not None and pr_up is not None
+    assert pr_up <= re_up - COLD, \
+        f"proactive fired at {pr_up}, reactive at {re_up}: lead < {COLD}"
+
+
+def test_mini_scenarios_scale_back_down():
+    """After the spike passes both controllers release replicas; the
+    proactive goodput guard must not pin the fleet at peak forever."""
+    lams = _flash_lams() + [0.05] * 120
+    for mode in ("reactive", "proactive"):
+        _, trace = _simulate(mode, lams, cold=COLD)
+        assert max(trace) > 1, f"{mode}: never scaled up"
+        assert trace[-1] < max(trace), f"{mode}: never scaled back down"

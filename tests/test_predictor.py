@@ -1,0 +1,238 @@
+"""Load-prediction forecasters: the shared observe/forecast contract,
+horizon semantics, and robustness properties.
+
+The deterministic contract tests always run; the randomized property
+sweeps additionally run under hypothesis when it is installed (same
+guard idiom as tests/test_properties.py)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.predictor import (EWMA, HoltWinters, WindowedAR,
+                                  make_predictor)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:        # property sweeps skip; contract tests still run
+    HAVE_HYPOTHESIS = False
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+FORECASTERS = [
+    pytest.param(lambda: EWMA(), id="ewma"),
+    pytest.param(lambda: HoltWinters(dt=1.0), id="holt"),
+    pytest.param(lambda: WindowedAR(dt=1.0), id="ar"),
+]
+
+
+# ------------------------------------------------ shared contract (determ.)
+@pytest.mark.parametrize("mk", FORECASTERS)
+@pytest.mark.parametrize("horizon", [0.0, 1.0, 7.5, 400.0])
+def test_forecast_nonnegative_finite(mk, horizon):
+    """Any history of non-negative loads, any horizon: the forecast is a
+    finite non-negative number (load forecasts feed ceil(demand/capacity)
+    — a nan/inf/negative would poison the replica plan)."""
+    rng = np.random.default_rng(3)
+    for vals in ([], [0.0], list(rng.uniform(0, 1e6, 50)),
+                 [1e6, 0.0] * 20, list(rng.exponential(5.0, 80))):
+        p = mk()
+        for i, v in enumerate(vals):
+            p.observe(float(i), float(v))
+        f = p.forecast(horizon)
+        assert math.isfinite(f)
+        assert f >= 0.0
+
+
+@pytest.mark.parametrize("mk", FORECASTERS)
+@pytest.mark.parametrize("level", [0.0, 3.25, 1e5])
+def test_constant_history_forecasts_the_constant(mk, level):
+    """A flat signal forecasts (about) itself at every horizon — no
+    forecaster invents a trend from a constant."""
+    p = mk()
+    for i in range(40):
+        p.observe(float(i), level)
+    for horizon in (1.0, 16.0, 250.0):
+        assert p.forecast(horizon) == pytest.approx(level, rel=1e-6,
+                                                    abs=1e-6)
+
+
+@pytest.mark.parametrize("mk", FORECASTERS)
+def test_empty_and_short_histories(mk):
+    """No observations, or fewer than any model's fit minimum: forecast
+    degrades to a finite non-negative value instead of raising."""
+    p = mk()
+    assert p.forecast(10.0) >= 0.0
+    p.observe(0.0, 3.0)
+    f = p.forecast(10.0)
+    assert math.isfinite(f) and f >= 0.0
+    p2 = mk()
+    for i in range(3):          # below WindowedAR's order+2 fit minimum
+        p2.observe(float(i), float(i))
+    f2 = p2.forecast(5.0)
+    assert math.isfinite(f2) and f2 >= 0.0
+
+
+# --------------------------------------------------- Holt-Winters horizon
+def test_holt_tracks_linear_ramp_at_any_horizon():
+    """On a noiseless linear ramp the level+trend model converges to the
+    line; forecast(h) must then extrapolate it: ~ last + slope * h."""
+    for slope, intercept in ((0.5, 10.0), (3.0, 0.0), (40.0, 7.0)):
+        p = HoltWinters(dt=1.0)
+        n = 400
+        for i in range(n):
+            p.observe(float(i), intercept + slope * i)
+        for horizon in (1.0, 12.0, 150.0):
+            want = intercept + slope * (n - 1) + slope * horizon
+            assert p.forecast(horizon) == pytest.approx(want, rel=0.05,
+                                                        abs=1.0)
+
+
+def test_holt_dt_scales_the_horizon():
+    """dt converts seconds to model steps: forecasting 2*dt ahead must
+    advance the trend exactly two steps regardless of dt."""
+    for dt in (0.5, 1.0, 4.0):
+        p = HoltWinters(dt=dt)
+        for i in range(200):
+            p.observe(i * dt, 2.0 * i)        # +2 per observation
+        f1 = p.forecast(dt)
+        f2 = p.forecast(2 * dt)
+        assert f2 - f1 == pytest.approx(2.0, rel=0.05)
+
+
+# ------------------------------------------------------ WindowedAR horizon
+def test_windowed_ar_forecast_honors_horizon_contract():
+    """Regression for the fixed bug: forecast(horizon_s) must roll the
+    fitted model ceil(horizon_s / dt) steps forward, not always one.  On a
+    deterministic ramp the AR fit is (near-)exact, so the h-step forecast
+    must land h steps up the line."""
+    p = WindowedAR(order=2, window=64, dt=1.0)
+    for i in range(40):
+        p.observe(float(i), 5.0 + 3.0 * i)
+    last = 5.0 + 3.0 * 39
+    for h in (1, 4, 10):
+        assert p.forecast(float(h)) == pytest.approx(last + 3.0 * h,
+                                                     rel=0.02, abs=0.5)
+    # dt != 1: the same wall horizon is fewer model steps
+    q = WindowedAR(order=2, window=64, dt=5.0)
+    for i in range(40):
+        q.observe(5.0 * i, 5.0 + 3.0 * i)
+    assert q.forecast(10.0) == pytest.approx(last + 3.0 * 2, rel=0.02,
+                                             abs=0.5)
+    # explicit steps override bypasses the dt conversion
+    assert q.forecast(steps=4) == pytest.approx(last + 3.0 * 4, rel=0.02,
+                                                abs=0.5)
+
+
+def _ar_series(coeffs, c, n=120, seed=0):
+    p = len(coeffs)
+    rng = np.random.default_rng(seed)
+    h = list(rng.uniform(0.0, 1.0, p))
+    for _ in range(n):
+        h.append(sum(a * x for a, x in zip(coeffs, h[-p:])) + c)
+    return h
+
+
+@pytest.mark.parametrize("coeffs,c", [
+    ((0.4,), 2.0),
+    ((0.3, -0.2), 5.0),
+    ((0.25, 0.1, -0.3), 0.0),
+])
+def test_windowed_ar_recovers_ar_coefficients(coeffs, c):
+    """Data generated by a stable AR(p) process is refit (least squares,
+    noiseless) to the generating coefficients."""
+    h = _ar_series(coeffs, c)
+    p = len(coeffs)
+    m = WindowedAR(order=p, window=200)
+    for i, v in enumerate(h):
+        m.observe(float(i), v)
+    fit = m._fit()
+    assert fit is not None
+    assert np.allclose(fit[:p], coeffs, atol=1e-4)
+    assert fit[p] == pytest.approx(c, abs=1e-4)
+    # and the one-step forecast continues the process
+    nxt = sum(a * x for a, x in zip(coeffs, h[-p:])) + c
+    assert m.forecast(1.0) == pytest.approx(max(0.0, nxt), abs=1e-3)
+
+
+def test_windowed_ar_long_horizons_never_blow_up():
+    """Iterated AR forecasts with unstable fitted poles diverge
+    geometrically; the rollout must clamp instead of returning inf/nan."""
+    m = WindowedAR(order=4, window=64)
+    for i in range(40):        # super-linear growth => explosive fit
+        m.observe(float(i), float(i ** 3))
+    for steps in (1, 50, 500):
+        f = m.forecast(steps=steps)
+        assert math.isfinite(f) and f >= 0.0
+
+
+# ----------------------------------------------------------------- factory
+def test_make_predictor_kinds_and_kwargs():
+    assert isinstance(make_predictor("ewma"), EWMA)
+    assert isinstance(make_predictor("holt", dt=2.0), HoltWinters)
+    ar = make_predictor("ar", order=3, dt=4.0)
+    assert isinstance(ar, WindowedAR)
+    assert ar.order == 3 and ar.dt == 4.0
+    with pytest.raises(KeyError):
+        make_predictor("lstm")
+
+
+# -------------------------------------------- property sweeps (hypothesis)
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.parametrize("mk", FORECASTERS)
+    @settings(**SETTINGS)
+    @given(st.lists(st.floats(0.0, 1e6), min_size=0, max_size=80),
+           st.floats(0.0, 1e4))
+    def test_prop_forecast_nonnegative_finite(mk, vals, horizon):
+        p = mk()
+        for i, v in enumerate(vals):
+            p.observe(float(i), v)
+        f = p.forecast(horizon)
+        assert math.isfinite(f) and f >= 0.0
+
+    @pytest.mark.parametrize("mk", FORECASTERS)
+    @settings(**SETTINGS)
+    @given(st.floats(0.0, 1e6), st.integers(1, 64), st.floats(0.0, 1e3))
+    def test_prop_constant_history(mk, level, n, horizon):
+        p = mk()
+        for i in range(n):
+            p.observe(float(i), level)
+        assert p.forecast(horizon) == pytest.approx(level, rel=1e-6,
+                                                    abs=1e-6)
+
+    @settings(**SETTINGS)
+    @given(st.floats(0.1, 50.0), st.floats(0.0, 100.0),
+           st.floats(1.0, 200.0))
+    def test_prop_holt_linear_ramp(slope, intercept, horizon):
+        p = HoltWinters(dt=1.0)
+        n = 400
+        for i in range(n):
+            p.observe(float(i), intercept + slope * i)
+        want = intercept + slope * (n - 1) + slope * horizon
+        assert p.forecast(horizon) == pytest.approx(want, rel=0.05, abs=1.0)
+
+    @settings(**SETTINGS)
+    @given(st.lists(st.floats(-0.4, 0.4), min_size=1, max_size=3),
+           st.floats(0.0, 10.0))
+    def test_prop_ar_coefficient_recovery(coeffs, c):
+        h = _ar_series(list(coeffs), c)
+        p = len(coeffs)
+        m = WindowedAR(order=p, window=200)
+        for i, v in enumerate(h):
+            m.observe(float(i), v)
+        fit = m._fit()
+        assert fit is not None
+        assert np.allclose(fit[:p], coeffs, atol=1e-4)
+
+    @settings(**SETTINGS)
+    @given(st.lists(st.floats(0.0, 1e3), min_size=6, max_size=64),
+           st.integers(1, 500))
+    def test_prop_ar_long_horizon_finite(vals, steps):
+        m = WindowedAR(order=4, window=64)
+        for i, v in enumerate(vals):
+            m.observe(float(i), v)
+        f = m.forecast(steps=steps)
+        assert math.isfinite(f) and f >= 0.0
